@@ -1,0 +1,122 @@
+"""Fault (passive swap-in) latency distribution -- paper Fig 14f / 15d.
+
+Paper targets: P90 < 10 us; measured in production 92.51-95.50% under
+10 us during high-load hot upgrades and 93.57% cluster-wide.
+
+Methodology: fill an overcommitted system with the paper's page mix
+(76.79% zero / 23.21% ~48%-compressible), let background reclaim swap the
+cold set out, then touch swapped MPs one at a time through the guest read
+path so each access takes exactly one EPT fault.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+# cap GIL-wait for the latency-critical fault path (the BACK reclaim
+# thread releases the GIL inside zlib, but Python-level sections would
+# otherwise hold it for the default 5 ms switch interval)
+sys.setswitchinterval(0.0005)
+
+from repro.core.config import LRUConfig, SchedulerConfig, TaijiConfig, WatermarkConfig
+from repro.core.system import TaijiSystem
+
+from .workload import fill_system
+
+
+def run(n_faults: int = 3000, verbose: bool = True) -> dict:
+    cfg = TaijiConfig(
+        ms_bytes=256 * 1024,          # production-shaped: 4 KiB MPs
+        mps_per_ms=64,
+        n_phys_ms=48,
+        overcommit_ratio=0.5,
+        mpool_reserve_ms=4,
+        lru=LRUConfig(scan_interval_s=0.001, workers=2, stabilize_scans=1),
+        watermark=WatermarkConfig(high=0.25, low=0.15, min=0.04,
+                                  reclaim_batch=8),
+        scheduler=SchedulerConfig(cycle_ms=2.0, shards=2),
+    )
+    system = TaijiSystem(cfg)
+    rng = np.random.default_rng(7)
+
+    payload = fill_system(system, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=7)
+    gfns = list(payload)
+
+    # age + reclaim until the watermark is satisfied (background path)
+    for _ in range(4):
+        for w in range(cfg.lru.workers):
+            system.lru.scan_shard(w, cfg.lru.workers)
+    while system.engine.reclaim_round() > 0:
+        pass
+
+    # Fault swapped MPs with production-like locality: MS popularity is
+    # Zipf-distributed and MP touches within an MS are sequential, so most
+    # faults land on already-partial MSs (no slot allocation on the path).
+    # On this single-core container, FRONT (faults) and BACK (lru scans +
+    # reclaim) are time-multiplexed exactly as hv_sched does on a
+    # saturated DPU: a burst of faults (timed), then a BACK slice
+    # (untimed) that keeps free memory above the watermarks.
+    ranks = np.arange(1, len(gfns) + 1, dtype=np.float64)
+    pop = 1.0 / ranks ** 1.2
+    pop /= pop.sum()
+    cursor = {g: 0 for g in gfns}
+    faulted = 0
+    attempts = 0
+    burst = 0
+    while faulted < n_faults and attempts < n_faults * 50:
+        attempts += 1
+        g = gfns[int(rng.choice(len(gfns), p=pop))]
+        req = system.reqs.lookup(g)
+        if req is None:
+            continue
+        rec = req.record
+        start = cursor[g]
+        mp = next((m % cfg.mps_per_ms for m in range(start, start + cfg.mps_per_ms)
+                   if rec.is_swapped_out(m % cfg.mps_per_ms)), None)
+        if mp is None:
+            continue
+        cursor[g] = mp + 1
+        before = system.metrics.faults
+        system.read(system.ms_addr(g, mp=mp), 64)
+        faulted += system.metrics.faults - before
+        burst += 1
+        if burst >= 32:                 # BACK slice: scans + reclaim
+            burst = 0
+            for w in range(cfg.lru.workers):
+                system.lru.scan_shard(w, cfg.lru.workers)
+            system.engine.reclaim_round()
+
+    h = system.metrics.fault_latency
+    snap = h.snapshot()
+    result = {
+        "faults": h.count,
+        "p50_us": snap["p50_us"],
+        "p90_us": snap["p90_us"],
+        "p99_us": snap["p99_us"],
+        "mean_us": snap["mean_us"],
+        "frac_under_10us": h.fraction_below(10_000),
+        "frac_under_15us": h.fraction_below(15_000),
+        "zero_page_faults": system.metrics.fault_zero_pages,
+        "compressed_faults": system.metrics.fault_compressed_pages,
+    }
+    if verbose:
+        print(f"faults={result['faults']}  P50={result['p50_us']:.1f}us  "
+              f"P90={result['p90_us']:.1f}us  P99={result['p99_us']:.1f}us")
+        print(f"under 10us: {result['frac_under_10us']*100:.2f}%  "
+              f"(paper: 93.57% cluster / >90% target)")
+    system.close()
+    return result
+
+
+def rows() -> list:
+    r = run(verbose=False)
+    return [
+        ("fault_latency_p50", r["p50_us"], "paper_target<10us_p90"),
+        ("fault_latency_p90", r["p90_us"], f"under10us={r['frac_under_10us']:.4f}"),
+        ("fault_latency_p99", r["p99_us"], f"under15us={r['frac_under_15us']:.4f}"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

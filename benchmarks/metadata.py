@@ -1,0 +1,56 @@
+"""Metadata (mpool) utilization -- paper Fig 13a + Table 2's lightweight claim.
+
+Paper: 400 MB reserved, 127.33 MB average used (46.69% peak-relative),
+68.53% full pages (EPT/IOMMU tables) vs 31.47% slab; total resource
+overhead 1.2% reserved / 0.38% live.
+"""
+from __future__ import annotations
+
+from repro.core.config import LRUConfig, TaijiConfig
+from repro.core.system import TaijiSystem
+
+from .workload import fill_system
+
+
+def run(verbose: bool = True) -> dict:
+    cfg = TaijiConfig(ms_bytes=128 * 1024, mps_per_ms=32, n_phys_ms=64,
+                      overcommit_ratio=0.5, mpool_reserve_ms=4,
+                      lru=LRUConfig(stabilize_scans=1, workers=1))
+    system = TaijiSystem(cfg)
+    fill_system(system, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=17)
+    st = system.mpool.stats()
+    managed_bytes = (cfg.n_phys_ms - cfg.mpool_reserve_ms) * cfg.ms_bytes
+    result = {
+        "reserved_bytes": st["reserved_bytes"],
+        "used_bytes": st["used_bytes"],
+        "peak_bytes": st["peak_bytes"],
+        "utilization": st["utilization"],
+        "full_page_fraction": st["full_page_fraction"],
+        "slab_fraction": st["slab_fraction"],
+        "overhead_live": st["used_bytes"] / managed_bytes,
+        "overhead_reserved": st["reserved_bytes"] / managed_bytes,
+    }
+    if verbose:
+        print(f"mpool: {st['used_bytes']/1024:.1f} KiB used of "
+              f"{st['reserved_bytes']/1024:.1f} KiB reserved "
+              f"({st['utilization']*100:.1f}%; paper 46.69% peak-relative)")
+        print(f"full pages {st['full_page_fraction']*100:.1f}% / slab "
+              f"{st['slab_fraction']*100:.1f}% (paper 68.53% / 31.47%)")
+        print(f"overhead: {result['overhead_live']*100:.2f}% live / "
+              f"{result['overhead_reserved']*100:.2f}% reserved "
+              f"(paper 0.38% / 1.2%)")
+    system.close()
+    return result
+
+
+def rows() -> list:
+    r = run(verbose=False)
+    return [
+        ("mpool_utilization", r["utilization"], "paper~0.47"),
+        ("mpool_overhead_live", r["overhead_live"], "paper=0.0038"),
+        ("mpool_full_page_fraction", r["full_page_fraction"], "paper=0.6853"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

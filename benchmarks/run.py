@@ -1,0 +1,58 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per the harness contract, plus the
+full roofline table. ``python -m benchmarks.run [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slower latency benchmark")
+    args = ap.parse_args()
+
+    from . import (backend_ratio, code_size, fault_latency, lru_accuracy,
+                   metadata, overcommit, overhead, roofline)
+
+    modules = [
+        ("overhead (Fig 11/12)", overhead),
+        ("metadata (Fig 13a)", metadata),
+        ("overcommit (Fig 13b, §5.3.3)", overcommit),
+        ("lru_accuracy (Fig 15b)", lru_accuracy),
+        ("backend_ratio (Fig 15c)", backend_ratio),
+        ("code_size (Table 2)", code_size),
+    ]
+    if not args.quick:
+        modules.insert(0, ("fault_latency (Fig 14f/15d)", fault_latency))
+
+    print("name,value,derived")
+    failures = 0
+    for title, mod in modules:
+        t0 = time.time()
+        try:
+            for name, value, derived in mod.rows():
+                print(f"{name},{value:.6g},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {title} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    print("\n# === roofline table (from dry-run artifacts) ===")
+    try:
+        roofline.run(verbose=True)
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Elastic serving: more live sequences than physical KV capacity.
+
+    PYTHONPATH=src python examples/elastic_serving.py
+
+Runs the full Taiji stack under a multi-turn serving workload (reduced
+qwen3-4b): idle sequences cool down in the multi-level LRU, the watermark
+policy swaps their KV blocks to the zero/compressed backend, and each
+scheduled batch pins + faults its blocks back in before decoding (the DMA
+contract). Halfway through, the swap engine is HOT-UPGRADED v1 -> v2
+under load -- serving never stops (paper §4.4).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.configs.reduce import reduced_config
+from repro.core import EngineModule, EngineModuleV2, EntryOps, install_module, hot_upgrade
+from repro.core.config import LRUConfig, SchedulerConfig
+from repro.core.elastic_kv import ElasticKVCache, KVGeometry, make_kv_taiji_config
+from repro.core.system import TaijiSystem
+from repro.models import model as M
+
+
+def main() -> None:
+    cfg = reduced_config("qwen3-4b")
+    geom = KVGeometry(n_layers=M.attn_layer_count(cfg),
+                      kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                      block_tokens=cfg.kv_block_tokens)
+    n_seqs, phys_blocks, turns, batch = 24, 48, 40, 4
+    prompt, gen = 24, 8
+    worst = n_seqs * (-(-(prompt + turns * gen) // geom.block_tokens))
+    tcfg = make_kv_taiji_config(
+        geom, phys_blocks, overcommit=worst / phys_blocks,
+        lru=LRUConfig(scan_interval_s=0.002, workers=2, stabilize_scans=1),
+        scheduler=SchedulerConfig(cycle_ms=2.0, shards=2))
+    system = TaijiSystem(tcfg)
+    system.start_background()
+    cache = ElasticKVCache(geom, system)
+
+    entry = EntryOps()
+    install_module(system, entry, EngineModule(system))
+
+    rng = np.random.default_rng(0)
+    for sid in range(n_seqs):
+        cache.create_sequence(sid)
+        for _ in range(prompt):
+            cache.append_kv(sid, rng.standard_normal(
+                (geom.n_layers, 2, geom.kv_heads, geom.head_dim)
+            ).astype(np.float16))
+
+    # a scheduled batch's pinned working set must fit physical memory (the
+    # DMA contract): finished conversations are recycled at max_ctx tokens
+    max_ctx = (phys_blocks // (2 * batch)) * geom.block_tokens
+
+    for turn in range(turns):
+        if turn == turns // 2:
+            print(">>> hot-upgrading swap engine v1 -> v2 under load...")
+            hot_upgrade(system, entry, EngineModuleV2(system))
+            print(f">>> running module version: {entry.call('version')}")
+        for sid in range(n_seqs):
+            if cache.seq_len(sid) + gen > max_ctx:   # conversation finished
+                cache.drop_sequence(sid)
+                cache.create_sequence(sid)
+                for _ in range(prompt):
+                    cache.append_kv(sid, rng.standard_normal(
+                        (geom.n_layers, 2, geom.kv_heads, geom.head_dim)
+                    ).astype(np.float16))
+        ids = rng.choice(n_seqs, size=batch, replace=False)
+        nxt = rng.choice(n_seqs, size=batch, replace=False)
+        prefetch = cache.prefetch_async(nxt)     # overlap next batch's swap-ins
+        with cache.prepare_step(ids):            # pin working set (DMA rule)
+            for _ in range(gen):
+                for sid in ids:
+                    cache.append_kv(int(sid), rng.standard_normal(
+                        (geom.n_layers, 2, geom.kv_heads, geom.head_dim)
+                    ).astype(np.float16))
+        prefetch.join(timeout=1)
+        if (turn + 1) % 10 == 0:
+            res = cache.residency()
+            print(f"turn {turn+1:3d}: {res['resident_blocks']} resident / "
+                  f"{res['swapped_blocks']} swapped blocks, "
+                  f"free={system.phys.free_count} MS")
+
+    st = system.stats()["metrics"]
+    print("\nfault latency:", st["fault_latency"])
+    print(f"swapped out {st['ms_swapped_out']} MSes; compression ratio "
+          f"{st['compression_ratio']:.3f}; module v{entry.call('version')}")
+    system.close()
+
+
+if __name__ == "__main__":
+    main()

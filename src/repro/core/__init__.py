@@ -1,0 +1,26 @@
+"""Taiji elastic-memory core (the paper's contribution, adapted to TPU/JAX).
+
+Layering (bottom up):
+  config/errors/metrics -> mpool -> virt (block table = EPT analogue)
+  -> ms/req (records + concurrency) -> backend -> lru -> watermark
+  -> swap (engine) -> scheduler (hv_sched) -> system (facade)
+  -> hotswitch / hotupgrade -> dma
+  -> elastic_kv / elastic_params (framework integrations)
+"""
+from .config import (ABI_VERSION, BackendConfig, LRUConfig, SchedulerConfig,
+                     TaijiConfig, WatermarkConfig, small_test_config)
+from .errors import (ABIMismatchError, CorruptionError, InvalidStateError,
+                     MpoolExhaustedError, OutOfMemoryError, PinnedError,
+                     TaijiError)
+from .system import TaijiSystem
+from .hotswitch import PlainMemorySystem, hot_switch
+from .hotupgrade import EngineModule, EngineModuleV2, EntryOps, hot_upgrade, install_module
+
+__all__ = [
+    "ABI_VERSION", "BackendConfig", "LRUConfig", "SchedulerConfig",
+    "TaijiConfig", "WatermarkConfig", "small_test_config",
+    "TaijiError", "OutOfMemoryError", "MpoolExhaustedError",
+    "CorruptionError", "PinnedError", "ABIMismatchError", "InvalidStateError",
+    "TaijiSystem", "PlainMemorySystem", "hot_switch",
+    "EntryOps", "EngineModule", "EngineModuleV2", "install_module", "hot_upgrade",
+]

@@ -1,0 +1,145 @@
+"""Configuration for the Taiji elastic-memory core.
+
+Mirrors the paper's deployed configuration by default:
+  * MS ("memory section") = 2 MiB huge page, MP ("memory page") = 4 KiB,
+    i.e. 512 MPs per MS (paper §4.2.2).
+  * 32 GB physical + 16 GB virtual elastic memory = +50% elasticity
+    (paper §5.3.2) -- expressed here as a ratio so tests can scale down.
+  * high/low/min watermarks (paper §4.2.2, Fig 14e).
+  * scheduler shares for FRONT/FCPU/BACK/IDLE (paper §4.3, Fig 9).
+
+Everything is a plain dataclass: configs are hashable/serializable and carry
+an ABI version so hot-upgrade can verify compatibility (paper §4.4 "Data
+Plane Compatibility").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+ABI_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LRUConfig:
+    """Multi-level hot/cold set parameters (paper §4.2.1, Fig 7)."""
+
+    scan_interval_s: float = 0.050      # periodic scan cadence per worker
+    levels: int = 6                     # HOT, HOT_INT, ACTIVE, INACTIVE, COLD_INT, COLD
+    # number of consecutive unchanged scans before a page moves one level
+    # toward the hot or cold end ("time-based stabilization", §4.2.1)
+    stabilize_scans: int = 2
+    scan_cache_size: int = 256          # per-worker scan cache (reduces lock contention)
+    workers: int = 2                    # parallel LRU tasks (per-PCPU in the paper)
+
+
+@dataclasses.dataclass(frozen=True)
+class WatermarkConfig:
+    """Free-memory watermarks in MS units as fractions of physical MSs."""
+
+    high: float = 0.20   # stop reclaim above this much free memory
+    low: float = 0.10    # start background reclaim below this
+    min: float = 0.03    # critically low: reclaim synchronously on the fault path
+    # optional policy knobs (§4.2.2: "Policies can be tuned")
+    reclaim_batch: int = 8          # MSs per background reclaim round
+    eager_below_high: bool = False  # start reclaim below *high* to pre-arm for bursts
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """hv_sched static shares + dynamic adjustment (paper §4.3)."""
+
+    cycle_ms: float = 10.0
+    # static proportional shares per priority class, must sum to <= 1.0
+    share_front: float = 0.70
+    share_fcpu: float = 0.05
+    share_back: float = 0.20
+    share_idle: float = 0.05
+    # dynamic adjustment: penalty factor applied to a task's slice after it
+    # overruns its quantum, and the number of cycles the penalty persists
+    overrun_penalty: float = 0.5
+    penalty_cycles: int = 3
+    shards: int = 2                 # number of scheduler shards (PCPUs/CPs)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """Swap backend stores (paper §4.2.2 backend + §7.2)."""
+
+    zero_page_enabled: bool = True
+    compression_enabled: bool = True
+    compression_level: int = 1       # zlib level; level 1 ~ lz4-class latency
+    # §7.2: free-page detection disabled in production (zone-lock overhead)
+    free_page_enabled: bool = False
+    # optional fallback tiers; "remote memory and disks act as fallback"
+    disk_fallback_path: str | None = None
+    crc_enabled: bool = True         # §7.1 CRC to guarantee correctness
+
+
+@dataclasses.dataclass(frozen=True)
+class TaijiConfig:
+    """Top-level configuration of the elastic-memory system."""
+
+    # geometry -- defaults mirror the paper (2 MiB MS / 4 KiB MP); tests and
+    # the KV-cache integration scale these down/up per use case.
+    ms_bytes: int = 2 * 1024 * 1024
+    mps_per_ms: int = 512
+    n_phys_ms: int = 64              # physical capacity in MSs
+    overcommit_ratio: float = 0.50   # +50% virtual elastic memory (paper O3)
+
+    mpool_reserve_ms: int = 4        # pinned metadata arena, in MSs (paper: 400 MB)
+
+    lru: LRUConfig = dataclasses.field(default_factory=LRUConfig)
+    watermark: WatermarkConfig = dataclasses.field(default_factory=WatermarkConfig)
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    backend: BackendConfig = dataclasses.field(default_factory=BackendConfig)
+
+    abi_version: int = ABI_VERSION
+    # reserved fields for forward-compatible hot upgrades (paper §4.4)
+    _reserved: Tuple[int, ...] = (0, 0, 0, 0)
+
+    @property
+    def mp_bytes(self) -> int:
+        return self.ms_bytes // self.mps_per_ms
+
+    @property
+    def n_virt_ms(self) -> int:
+        """Total virtual MSs visible to the guest (physical + elastic)."""
+        return int(round(self.n_phys_ms * (1.0 + self.overcommit_ratio)))
+
+    @property
+    def n_elastic_ms(self) -> int:
+        return self.n_virt_ms - self.n_phys_ms
+
+    def validate(self) -> None:
+        if self.ms_bytes % self.mps_per_ms:
+            raise ValueError("ms_bytes must be divisible by mps_per_ms")
+        if self.mp_bytes % 8:
+            raise ValueError("mp_bytes must be a multiple of 8")
+        if self.n_phys_ms <= self.mpool_reserve_ms:
+            raise ValueError("physical memory must exceed the mpool reserve")
+        wm = self.watermark
+        if not (0.0 <= wm.min <= wm.low <= wm.high < 1.0):
+            raise ValueError("watermarks must satisfy 0 <= min <= low <= high < 1")
+        sc = self.scheduler
+        total = sc.share_front + sc.share_fcpu + sc.share_back + sc.share_idle
+        if total > 1.0 + 1e-9:
+            raise ValueError("scheduler shares must sum to <= 1.0")
+
+
+def small_test_config(**overrides) -> TaijiConfig:
+    """A reduced configuration for fast unit tests."""
+    base = dict(
+        ms_bytes=16 * 1024,
+        mps_per_ms=8,
+        n_phys_ms=24,
+        overcommit_ratio=0.5,
+        mpool_reserve_ms=2,
+        lru=LRUConfig(scan_interval_s=0.002, workers=2, stabilize_scans=1,
+                      scan_cache_size=32),
+        scheduler=SchedulerConfig(cycle_ms=2.0, shards=2),
+    )
+    base.update(overrides)
+    cfg = TaijiConfig(**base)
+    cfg.validate()
+    return cfg

@@ -1,0 +1,193 @@
+"""Elastic paged KV cache -- Taiji applied to LLM serving.
+
+The DPU analogy (DESIGN.md §2): a serving node statically reserves KV
+space for its *maximum* concurrent sequences, but most sequences are idle
+between turns -- exactly the paper's "reserved for peak, cold in practice"
+memory. Taiji makes that reservation elastic:
+
+  * one MS per (sequence, KV block): ``block_tokens`` tokens x all layers
+    x K+V, so swap decisions happen at the paper's huge-page granularity
+    while faults resolve at MP granularity;
+  * idle sequences cool down in the multi-level LRU and get swapped to the
+    zero/compressed backend by the watermark-driven reclaim task;
+  * scheduling a sequence for decode = the DMA-range contract: its blocks
+    are swapped in *before* the step and pinned while the step (the
+    "no-retry DMA device") is in flight;
+  * the device-side data plane reads KV through the block table inside the
+    paged-attention kernel (kernels/paged_attention.py) -- the EPT walk on
+    the I/O path.
+
+Beyond-paper: ``prefetch_async`` overlaps the next batch's swap-ins with
+the current step (double buffering), recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .config import TaijiConfig
+from .system import TaijiSystem
+
+
+@dataclasses.dataclass(frozen=True)
+class KVGeometry:
+    n_layers: int
+    kv_heads: int
+    head_dim: int
+    block_tokens: int = 16
+    dtype_bytes: int = 2        # bf16 on device
+
+    @property
+    def block_bytes(self) -> int:
+        # K and V for all layers of one block of tokens
+        return (self.block_tokens * self.n_layers * 2 * self.kv_heads
+                * self.head_dim * self.dtype_bytes)
+
+    @property
+    def tokens_per_block(self) -> int:
+        return self.block_tokens
+
+
+def _mpool_reserve_ms(ms_bytes: int, mps: int, n_phys: int,
+                      overcommit: float) -> int:
+    """Size the pinned arena for the virtual space with 2x headroom
+    (the paper reserves 400 MB and reports <50% average utilization)."""
+    n_virt = int(round((n_phys) * (1.0 + overcommit))) + 2
+    per_gfn = (192 + 6 * mps) + 16          # MS record slab + table words
+    need = 2 * (n_virt * per_gfn + 4 * ms_bytes)
+    return max(2, -(-need // ms_bytes))
+
+
+def make_kv_taiji_config(geom: KVGeometry, n_phys_blocks: int,
+                         overcommit: float = 0.5, **overrides) -> TaijiConfig:
+    """Size a Taiji config so one MS == one KV block."""
+    ms_bytes = geom.block_bytes
+    mps = 8
+    while ms_bytes // mps < 512 and mps > 1:
+        mps //= 2
+    reserve = _mpool_reserve_ms(ms_bytes, mps, n_phys_blocks, overcommit)
+    base = dict(
+        ms_bytes=ms_bytes,
+        mps_per_ms=mps,
+        n_phys_ms=n_phys_blocks + reserve,
+        mpool_reserve_ms=reserve,
+        overcommit_ratio=overcommit,
+    )
+    base.update(overrides)
+    return TaijiConfig(**base)
+
+
+class ElasticKVCache:
+    """Host-side elastic KV block store for a serving node."""
+
+    def __init__(self, geom: KVGeometry, system: TaijiSystem) -> None:
+        self.geom = geom
+        self.system = system
+        self._lock = threading.Lock()
+        # seq_id -> list of gfns (one per block) and token count
+        self._blocks: Dict[int, List[int]] = {}
+        self._tokens: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ sequences
+    def create_sequence(self, seq_id: int) -> None:
+        with self._lock:
+            if seq_id in self._blocks:
+                raise ValueError(f"sequence {seq_id} exists")
+            self._blocks[seq_id] = []
+            self._tokens[seq_id] = 0
+
+    def drop_sequence(self, seq_id: int) -> None:
+        with self._lock:
+            gfns = self._blocks.pop(seq_id, [])
+            self._tokens.pop(seq_id, None)
+        for gfn in gfns:
+            self.system.guest_free_ms(gfn)
+
+    def seq_len(self, seq_id: int) -> int:
+        return self._tokens[seq_id]
+
+    def blocks_of(self, seq_id: int) -> List[int]:
+        return list(self._blocks[seq_id])
+
+    # --------------------------------------------------------------- writes
+    def append_kv(self, seq_id: int, kv_token: np.ndarray) -> None:
+        """Append one token's KV (shape: [n_layers, 2, kv_heads, head_dim])."""
+        g = self.geom
+        expect = (g.n_layers, 2, g.kv_heads, g.head_dim)
+        if kv_token.shape != expect:
+            raise ValueError(f"kv shape {kv_token.shape} != {expect}")
+        raw = kv_token.astype(np.float16 if g.dtype_bytes == 2 else np.float32)
+        with self._lock:
+            t = self._tokens[seq_id]
+            blocks = self._blocks[seq_id]
+        slot = t % g.block_tokens
+        if slot == 0:                      # new block needed
+            gfn = self.system.guest_alloc_ms()
+            with self._lock:
+                blocks.append(gfn)
+        gfn = blocks[t // g.block_tokens]
+        token_bytes = raw.nbytes
+        addr = self.system.ms_addr(gfn) + slot * token_bytes
+        self.system.write(addr, raw.tobytes())
+        with self._lock:
+            self._tokens[seq_id] = t + 1
+
+    # ---------------------------------------------------------------- reads
+    def read_block(self, seq_id: int, block_idx: int) -> np.ndarray:
+        """Read one block back as [block_tokens, n_layers, 2, kv_heads, head_dim]."""
+        g = self.geom
+        gfn = self._blocks[seq_id][block_idx]
+        raw = self.system.read(self.system.ms_addr(gfn), g.block_bytes)
+        dt = np.float16 if g.dtype_bytes == 2 else np.float32
+        return np.frombuffer(raw, dtype=dt).reshape(
+            g.block_tokens, g.n_layers, 2, g.kv_heads, g.head_dim)
+
+    # ------------------------------------------------------------- stepping
+    def prepare_step(self, seq_ids: Sequence[int]):
+        """Swap in + pin all blocks of the scheduled batch.
+
+        Returns the DMA pin context; use ``with cache.prepare_step(b): step()``.
+        Missing blocks are faulted in (this is where fault latency is paid
+        and measured); pinned blocks cannot be reclaimed mid-step.
+        """
+        gfns: List[int] = []
+        with self._lock:
+            for sid in seq_ids:
+                gfns.extend(self._blocks[sid])
+        return self.system.dma.pin_for_step(gfns)
+
+    def prefetch_async(self, seq_ids: Sequence[int]) -> threading.Thread:
+        """Beyond-paper: overlap next batch's swap-ins with the current step."""
+        with self._lock:
+            gfns = [g for sid in seq_ids for g in self._blocks.get(sid, [])]
+
+        def work() -> None:
+            for gfn in gfns:
+                # opportunistic: never compete with the pinned in-flight
+                # step for the last free slots
+                if self.system.phys.free_count <= self.system.watermark.low_ms:
+                    return
+                req = self.system.reqs.lookup(gfn)
+                if req is not None and req.record.swapped_out_count() > 0:
+                    self.system.engine.swap_in_ms(gfn)
+
+        th = threading.Thread(target=work, name="kv-prefetch", daemon=True)
+        th.start()
+        return th
+
+    # ------------------------------------------------------------ telemetry
+    def residency(self) -> Dict[str, int]:
+        from .virt import NO_PFN
+        resident = swapped = 0
+        with self._lock:
+            all_gfns = [g for bl in self._blocks.values() for g in bl]
+        for g in all_gfns:
+            if int(self.system.virt.table.pfn[g]) != NO_PFN:
+                resident += 1
+            else:
+                swapped += 1
+        return {"resident_blocks": resident, "swapped_blocks": swapped,
+                "total_blocks": resident + swapped}

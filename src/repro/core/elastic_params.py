@@ -1,0 +1,110 @@
+"""Elastic MoE expert-weight cache -- Taiji applied to sparse models.
+
+MoE expert weights are the cleanest in-model instance of the paper's
+observation: capacity provisioned for *all* experts while the router's
+empirical distribution keeps a fraction of them hot. One MS holds one
+expert's weight shard; router statistics feed the access bits; rarely
+routed experts cool down and get compressed out; a scheduled batch whose
+router activates a swapped expert faults it back in before dispatch (the
+DMA contract again).
+
+Inapplicable to dense architectures -- noted in DESIGN.md
+§Arch-applicability; dense archs run without this feature.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+from .config import TaijiConfig
+from .system import TaijiSystem
+
+
+def make_expert_taiji_config(expert_bytes: int, n_hot_experts: int,
+                             n_experts: int, **overrides) -> TaijiConfig:
+    """Size a Taiji config: one MS per expert, physical = hot working set."""
+    mps = 16
+    while expert_bytes // mps < 1024 and mps > 1:
+        mps //= 2
+    # align the MS so every MP is a multiple of 8 bytes
+    align = 8 * mps
+    expert_bytes = -(-expert_bytes // align) * align
+    over = max(0.25, n_experts / max(1, n_hot_experts) - 1.0)
+    from .elastic_kv import _mpool_reserve_ms
+    reserve = _mpool_reserve_ms(expert_bytes, mps, n_hot_experts, over)
+    base = dict(
+        ms_bytes=expert_bytes,
+        mps_per_ms=mps,
+        n_phys_ms=n_hot_experts + reserve,
+        mpool_reserve_ms=reserve,
+        overcommit_ratio=over,
+    )
+    base.update(overrides)
+    return TaijiConfig(**base)
+
+
+class ElasticExpertCache:
+    """Host-side elastic store for per-expert weights of one MoE layer."""
+
+    def __init__(self, system: TaijiSystem, n_experts: int,
+                 expert_shape: tuple, dtype=np.float32) -> None:
+        self.system = system
+        self.n_experts = n_experts
+        self.expert_shape = expert_shape
+        self.dtype = np.dtype(dtype)
+        nbytes = int(np.prod(expert_shape)) * self.dtype.itemsize
+        if nbytes > system.cfg.ms_bytes:
+            raise ValueError(f"expert ({nbytes}B) exceeds MS ({system.cfg.ms_bytes}B)")
+        self._lock = threading.Lock()
+        self._gfn: Dict[int, int] = {}
+        self.route_counts = np.zeros(n_experts, dtype=np.int64)
+
+    # ------------------------------------------------------------- weights
+    def put_expert(self, eid: int, weights: np.ndarray) -> None:
+        if weights.shape != self.expert_shape:
+            raise ValueError("bad expert shape")
+        with self._lock:
+            gfn = self._gfn.get(eid)
+            if gfn is None:
+                gfn = self.system.guest_alloc_ms()
+                self._gfn[eid] = gfn
+        self.system.write(self.system.ms_addr(gfn),
+                          weights.astype(self.dtype).tobytes())
+
+    def get_expert(self, eid: int) -> np.ndarray:
+        with self._lock:
+            gfn = self._gfn[eid]
+        nbytes = int(np.prod(self.expert_shape)) * self.dtype.itemsize
+        raw = self.system.read(self.system.ms_addr(gfn), nbytes)
+        return np.frombuffer(raw, dtype=self.dtype).reshape(self.expert_shape)
+
+    # ------------------------------------------------------------- routing
+    def note_routing(self, expert_ids: Iterable[int]) -> None:
+        """Report the router's choices: marks those experts accessed."""
+        for eid in set(expert_ids):
+            self.route_counts[eid] += 1
+            with self._lock:
+                gfn = self._gfn.get(eid)
+            if gfn is not None:
+                self.system.virt.table.mark_accessed(gfn)
+
+    def prepare_dispatch(self, active_experts: Sequence[int]):
+        """Swap in + pin the experts the scheduled batch activates."""
+        with self._lock:
+            gfns = [self._gfn[e] for e in active_experts if e in self._gfn]
+        return self.system.dma.pin_for_step(gfns)
+
+    # ------------------------------------------------------------ telemetry
+    def residency(self) -> Dict[str, int]:
+        from .virt import NO_PFN
+        resident = swapped = 0
+        with self._lock:
+            gfns = list(self._gfn.values())
+        for g in gfns:
+            if int(self.system.virt.table.pfn[g]) != NO_PFN:
+                resident += 1
+            else:
+                swapped += 1
+        return {"resident_experts": resident, "swapped_experts": swapped}

@@ -1,0 +1,160 @@
+"""Runtime metrics for the elastic-memory core.
+
+The paper evaluates Taiji with fault-latency percentiles (Fig 14f / 15d),
+water-level timelines (Fig 14e / 15a), hot/cold page counts (Fig 14c/d,
+15b), backend composition (Fig 15c) and metadata utilization (Fig 13a).
+This module provides the counters/histograms those benchmarks read.
+
+The fault path is latency-critical (P90 < 10 us), so ``LatencyHistogram``
+records with integer bucket math only -- no allocation, no locking beyond
+the GIL (single bytecode ops on ints are atomic in CPython).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+
+class LatencyHistogram:
+    """Fixed-bucket nanosecond latency histogram.
+
+    Buckets are powers of two from 256 ns to ~67 ms plus an overflow bucket.
+    """
+
+    _BASE_SHIFT = 8          # first bucket: < 2**8 ns
+    _NBUCKETS = 20
+    _RESERVOIR = 200_000     # exact samples kept for precise percentiles
+
+    def __init__(self) -> None:
+        self.buckets = [0] * (self._NBUCKETS + 1)
+        self.count = 0
+        self.total_ns = 0
+        self.max_ns = 0
+        self.samples = []    # bounded exact reservoir (list.append ~50ns)
+
+    def record(self, ns: int) -> None:
+        idx = max(0, ns.bit_length() - self._BASE_SHIFT)
+        if idx > self._NBUCKETS:
+            idx = self._NBUCKETS
+        self.buckets[idx] += 1
+        self.count += 1
+        self.total_ns += ns
+        if ns > self.max_ns:
+            self.max_ns = ns
+        if len(self.samples) < self._RESERVOIR:
+            self.samples.append(ns)
+
+    def percentile(self, p: float) -> float:
+        """Percentile in ns: exact from the reservoir when available."""
+        if self.count == 0:
+            return 0.0
+        if self.samples:
+            s = sorted(self.samples)
+            return float(s[min(len(s) - 1, int(p * len(s)))])
+        target = p * self.count
+        seen = 0
+        for i, c in enumerate(self.buckets):
+            seen += c
+            if seen >= target:
+                return float(1 << (i + self._BASE_SHIFT))
+        return float(self.max_ns)
+
+    def fraction_below(self, ns: int) -> float:
+        """Fraction of samples below ``ns``."""
+        if self.count == 0:
+            return 1.0
+        if self.samples:
+            return sum(1 for s in self.samples if s < ns) / len(self.samples)
+        seen = 0
+        for i, c in enumerate(self.buckets):
+            upper = 1 << (i + self._BASE_SHIFT)
+            if upper > ns:
+                break
+            seen += c
+        return seen / self.count
+
+    @property
+    def mean_ns(self) -> float:
+        return self.total_ns / self.count if self.count else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "mean_us": self.mean_ns / 1e3,
+            "p50_us": self.percentile(0.50) / 1e3,
+            "p90_us": self.percentile(0.90) / 1e3,
+            "p99_us": self.percentile(0.99) / 1e3,
+            "max_us": self.max_ns / 1e3,
+        }
+
+
+class Timeline:
+    """Append-only (t, value) series, e.g. free-memory water level."""
+
+    def __init__(self, maxlen: int = 100_000) -> None:
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.points: List[tuple] = []
+        self._maxlen = maxlen
+
+    def record(self, value: float) -> None:
+        with self._lock:
+            if len(self.points) < self._maxlen:
+                self.points.append((time.perf_counter() - self._t0, value))
+
+
+class Metrics:
+    """All counters for one Taiji instance."""
+
+    def __init__(self) -> None:
+        # fault path (passive swap-in) latency -- the paper's headline metric
+        self.fault_latency = LatencyHistogram()
+        # active-task latencies
+        self.swap_out_latency = LatencyHistogram()
+        self.swap_in_latency = LatencyHistogram()
+
+        # counters (GIL-atomic int += in single ops is fine for stats)
+        self.faults = 0
+        self.fault_zero_pages = 0
+        self.fault_compressed_pages = 0
+        self.ms_swapped_out = 0
+        self.ms_swapped_in = 0
+        self.mp_swapped_out = 0
+        self.mp_swapped_in = 0
+        self.writer_cancels = 0          # rw-lock cancel events (paper Fig 8 (2.2))
+        self.crc_checks = 0
+        self.crc_failures = 0
+        self.dmar_intercepts = 0         # faults on registered DMA ranges (paper §7.1)
+        self.reclaim_rounds = 0
+        self.proactive_reclaims = 0      # min-watermark synchronous reclaims
+
+        # backend composition (paper Fig 15c)
+        self.backend_zero_mps = 0
+        self.backend_compressed_mps = 0
+        self.backend_raw_bytes = 0
+        self.backend_stored_bytes = 0
+
+        self.free_ms_timeline = Timeline()
+        self.hot_cold_timeline = Timeline()
+
+    def compression_ratio(self) -> float:
+        """stored/raw over the compressed population (paper: 47.63%)."""
+        if self.backend_raw_bytes == 0:
+            return 1.0
+        return self.backend_stored_bytes / self.backend_raw_bytes
+
+    def snapshot(self) -> Dict[str, object]:
+        return {
+            "faults": self.faults,
+            "fault_latency": self.fault_latency.snapshot(),
+            "ms_swapped_out": self.ms_swapped_out,
+            "ms_swapped_in": self.ms_swapped_in,
+            "mp_swapped_out": self.mp_swapped_out,
+            "mp_swapped_in": self.mp_swapped_in,
+            "writer_cancels": self.writer_cancels,
+            "crc_failures": self.crc_failures,
+            "zero_mps": self.backend_zero_mps,
+            "compressed_mps": self.backend_compressed_mps,
+            "compression_ratio": self.compression_ratio(),
+        }

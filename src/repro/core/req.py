@@ -1,0 +1,160 @@
+"""Swap request entities and their concurrency control (paper §4.2.2, Fig 8).
+
+Four atomicity layers, reproduced 1:1:
+
+  1. **req abstraction** -- one req per MS, unique, stored in a red-black
+     tree for efficient page-fault lookup; independent MS-level locks allow
+     parallel swaps of different MSs.
+  2. **read-write lock** -- active tasks (Swap_out / prefetch Swap_in) are
+     serialized via the write lock; passive fault-driven swap-ins take read
+     locks and run in parallel. On conflict, a *cancel* mechanism makes the
+     write-locked task exit promptly (Fig 8 (2.2)).
+  3. **execution bitmaps** -- ``bm_out`` (already swapped out) gates what may
+     swap in; ``bm_in`` (currently swapping in) gives exactly-once swap-in
+     per MP when multiple faults hit the same MP (Fig 8 (3.3)).
+  4. **MS/MP state control** -- exactly-once split/reclaim/alloc/merge at
+     defined transitions (Fig 8 (4.1)/(7)), guarded by the per-req mutex.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from .config import TaijiConfig
+from .errors import InvalidStateError
+from .mpool import Mpool
+from .ms import MSRecord
+from .rbtree import RBTree
+
+
+class WriteGrant:
+    """Held by the single active writer; readers set ``cancelled``."""
+
+    __slots__ = ("cancelled",)
+
+    def __init__(self) -> None:
+        self.cancelled = False
+
+
+class RWLockWriterCancel:
+    """MS-level read-write lock with writer cancellation.
+
+    Readers (passive fault swap-ins) may always make progress: if a writer
+    holds the lock, arriving readers flag it for cancellation and block
+    until it exits (the writer polls :attr:`WriteGrant.cancelled` at safe
+    points and aborts promptly). Writers are mutually exclusive and wait
+    for all readers to drain.
+    """
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer: Optional[WriteGrant] = None
+        self.cancel_count = 0  # stats: how often readers bumped a writer
+
+    # --------------------------------------------------------------- readers
+    def acquire_read(self) -> None:
+        with self._cond:
+            if self._writer is not None and not self._writer.cancelled:
+                self._writer.cancelled = True
+                self.cancel_count += 1
+            while self._writer is not None:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    # --------------------------------------------------------------- writers
+    def acquire_write(self, blocking: bool = True) -> Optional[WriteGrant]:
+        with self._cond:
+            if not blocking and (self._writer is not None or self._readers > 0):
+                return None
+            while self._writer is not None or self._readers > 0:
+                self._cond.wait()
+            self._writer = WriteGrant()
+            return self._writer
+
+    def release_write(self, grant: WriteGrant) -> None:
+        with self._cond:
+            if self._writer is not grant:
+                raise InvalidStateError("releasing a write grant not held")
+            self._writer = None
+            self._cond.notify_all()
+
+
+class Req:
+    """Per-MS swap request entity: record + lock + fine-grained MP mutex."""
+
+    __slots__ = ("gfn", "record", "rwlock", "mp_mutex", "mp_cond")
+
+    def __init__(self, gfn: int, record: MSRecord) -> None:
+        self.gfn = gfn
+        self.record = record
+        self.rwlock = RWLockWriterCancel()
+        # short mutex guarding bitmap/state transitions (word-level CAS in
+        # the kernel; a tiny critical section here), plus a condition used
+        # by faults waiting on an in-flight IO for the same MP (Fig 8 (3.3))
+        self.mp_mutex = threading.Lock()
+        self.mp_cond = threading.Condition(self.mp_mutex)
+
+    # convenience accessors used by the virtualization layer's presence probe
+    def mp_present(self, mp: int) -> bool:
+        r = self.record
+        return not r.is_swapped_out(mp) and not r.is_swapping_in(mp)
+
+
+class ReqTree:
+    """All reqs, keyed by GFN in a red-black tree (paper Fig 8 (1.1-1.3))."""
+
+    def __init__(self, cfg: TaijiConfig, mpool: Mpool) -> None:
+        self.cfg = cfg
+        self.mpool = mpool
+        self._tree = RBTree()
+        self._lock = threading.Lock()
+        # fast-path cache: dict lookups are O(1); the RB tree remains the
+        # authoritative ordered structure (and is what property tests check)
+        self._cache: Dict[int, Req] = {}
+
+    def lookup(self, gfn: int) -> Optional[Req]:
+        req = self._cache.get(gfn)
+        if req is not None:
+            return req
+        with self._lock:
+            return self._tree.find(gfn)
+
+    def get_or_create(self, gfn: int, pfn: int) -> Req:
+        """Fetch the req for ``gfn`` or create one on initial swap-out."""
+        req = self.lookup(gfn)
+        if req is not None:
+            return req
+        with self._lock:
+            req = self._tree.find(gfn)
+            if req is None:
+                record = MSRecord.allocate(self.cfg, self.mpool, gfn, pfn)
+                req = Req(gfn, record)
+                self._tree.insert(gfn, req)
+                self._cache[gfn] = req
+            return req
+
+    def remove(self, gfn: int) -> None:
+        with self._lock:
+            req: Req = self._tree.delete(gfn)
+            self._cache.pop(gfn, None)
+            self.mpool.slab_free(req.record.handle)
+
+    def __len__(self) -> int:
+        return len(self._tree)
+
+    def items(self):
+        with self._lock:
+            return list(self._tree.items())
+
+    def check_invariants(self) -> None:
+        with self._lock:
+            self._tree.check_invariants()
+            for gfn, req in self._tree.items():
+                assert req.gfn == gfn == req.record.gfn

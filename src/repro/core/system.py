@@ -1,0 +1,152 @@
+"""TaijiSystem -- the assembled elastic-memory system.
+
+Wires together the virtualization layer, mpool, backend, req tree, LRU,
+watermark policy, swap engine, hv_sched and DMA registry, and exposes the
+guest-facing API (allocate/free elastic MSs, read/write through the block
+table). This is what the hot-switch produces from a running plain system
+and what the framework integrations (elastic_kv / elastic_params) drive.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from . import scheduler as sched
+from .backend import BackendStore
+from .config import TaijiConfig
+from .dma import DMARegistry
+from .errors import InvalidStateError
+from .lru import MultiLevelLRU
+from .metrics import Metrics
+from .mpool import Mpool
+from .req import ReqTree
+from .swap import SwapEngine
+from .virt import NO_PFN, PhysicalMemory, VirtualizationLayer
+from .watermark import WatermarkPolicy
+
+
+class TaijiSystem:
+    def __init__(self, cfg: TaijiConfig,
+                 phys: Optional[PhysicalMemory] = None) -> None:
+        cfg.validate()
+        self.cfg = cfg
+        self.phys = phys or PhysicalMemory(cfg)
+        self.mpool = Mpool(self.phys.mpool_arena(), cfg.mp_bytes)
+        self.metrics = Metrics()
+        self.virt = VirtualizationLayer(cfg, self.phys, self.mpool)
+        self.backend = BackendStore(cfg, self.metrics)
+        self.reqs = ReqTree(cfg, self.mpool)
+        self.lru = MultiLevelLRU(cfg, self.virt.table.test_and_clear_accessed)
+        self.watermark = WatermarkPolicy(cfg)
+        self.engine = SwapEngine(cfg, self.virt, self.backend, self.reqs,
+                                 self.lru, self.watermark, self.metrics)
+        self.scheduler = sched.HvScheduler(cfg)
+        self.dma = DMARegistry(self.virt, self.engine, self.metrics)
+
+        self._gfn_lock = threading.Lock()
+        self._free_gfns: List[int] = list(
+            range(cfg.n_virt_ms - 1, cfg.mpool_reserve_ms - 1, -1))
+        self._background_started = False
+        self.module_version = 1          # bumped by hot upgrades
+
+    # ---------------------------------------------------------- guest alloc
+    def guest_alloc_ms(self) -> int:
+        """Allocate one virtual MS (elastic: may trigger reclaim)."""
+        with self._gfn_lock:
+            if not self._free_gfns:
+                raise InvalidStateError("virtual address space exhausted")
+            gfn = self._free_gfns.pop()
+        pfn = self.engine._alloc_slot_critical()
+        self.virt.table.map_huge(gfn, pfn)
+        self.phys.ms_view(pfn)[:] = 0
+        self.lru.track(gfn)
+        return gfn
+
+    def guest_free_ms(self, gfn: int) -> None:
+        # ordering matters vs. the background reclaimer: leave the LRU
+        # first (no new reclaim picks), then take the req's write lock to
+        # wait out any in-flight swap task before tearing the MS down
+        self.lru.untrack(gfn)
+        req = self.reqs.lookup(gfn)
+        grant = req.rwlock.acquire_write() if req is not None else None
+        try:
+            pfn = int(self.virt.table.pfn[gfn])
+            if req is not None:
+                rec = req.record
+                for mp in range(self.cfg.mps_per_ms):
+                    if rec.is_swapped_out(mp):
+                        self.backend.drop(gfn, mp, int(rec.kinds[mp]))
+            if pfn != NO_PFN:
+                if self.virt.table.is_split(gfn):
+                    self.virt.table.merge(gfn, pfn)  # normalize before unmap
+                self.virt.table.unmap(gfn)
+                self.phys.free_slot(pfn)
+        finally:
+            if grant is not None:
+                req.rwlock.release_write(grant)
+        if req is not None:
+            self.reqs.remove(gfn)
+        with self._gfn_lock:
+            self._free_gfns.append(gfn)
+
+    # ----------------------------------------------------------- guest I/O
+    def write(self, gva: int, data: bytes) -> None:
+        self.virt.guest_write(gva, data)
+
+    def read(self, gva: int, nbytes: int) -> bytes:
+        return self.virt.guest_read(gva, nbytes)
+
+    def ms_addr(self, gfn: int, mp: int = 0, off: int = 0) -> int:
+        return gfn * self.cfg.ms_bytes + mp * self.cfg.mp_bytes + off
+
+    # ------------------------------------------------------------ background
+    def start_background(self) -> None:
+        """Register LRU scan + reclaim as BACK tasks and start hv_sched."""
+        if self._background_started:
+            return
+        self._background_started = True
+        nw = self.cfg.lru.workers
+
+        def make_scan(shard: int):
+            def scan(_quantum: float) -> bool:
+                self.lru.scan_shard(shard, nw)
+                return True
+            return scan
+
+        for w in range(nw):
+            self.scheduler.add_task(w, f"lru/{w}", sched.BACK, make_scan(w))
+
+        def reclaim(_quantum: float) -> bool:
+            self.engine.reclaim_round()
+            return True
+
+        self.scheduler.add_task(0, "reclaim", sched.BACK, reclaim)
+
+        def idle(_quantum: float) -> bool:
+            self.metrics.hot_cold_timeline.record(self.engine.resident_cold_fraction())
+            return True
+
+        self.scheduler.add_task(0, "idle-stats", sched.IDLE, idle)
+        self.scheduler.start()
+
+    def stop_background(self) -> None:
+        if self._background_started:
+            self.scheduler.stop()
+            self._background_started = False
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        return {
+            "module_version": self.module_version,
+            "free_ms": self.phys.free_count,
+            "watermarks": self.watermark.describe(),
+            "lru": self.lru.counts(),
+            "mpool": self.mpool.stats(),
+            "metrics": self.metrics.snapshot(),
+            "n_reqs": len(self.reqs),
+            "backend_stored_bytes": self.backend.stored_bytes(),
+        }
+
+    def close(self) -> None:
+        self.stop_background()
+        self.backend.close()

@@ -1,0 +1,302 @@
+"""Hybrid virtualization layer (paper §4.1).
+
+Address-space model, kept 1:1 with the paper's:
+
+  * GVA -> GPA via the guest kernel page table (``init_mm``). The Taiji
+    module lives inside the guest kernel, so GVA == HVA; for the managed
+    region the guest mapping is the identity (kernel linear map), which we
+    model with :meth:`AddressSpace.gva_to_gpa`.
+  * GPA -> HPA via the **block table** (the EPT analogue), which maps a
+    virtual memory section (keyed by GFN) to a physical slot (PFN) at huge
+    granularity, or -- after the exactly-once *split* at first MP swap-out --
+    at per-MP granularity within the slot.
+  * Taiji's own accesses run in "root mode" and bypass the block table
+    (single-layer translation, §4.1.1 Fourth), which is only correct for
+    GPA == HPA memory: the pinned mpool arena. :meth:`root_access` asserts
+    that contract.
+
+Fault model: a guest access to a swapped MP raises :class:`EPTFault`
+(= EPT violation VM exit). The swap engine's ``Fault_in`` task resolves it.
+On a TPU there is no synchronous fault from inside a compiled step, so the
+framework integration (elastic_kv/elastic_params) discovers misses at
+step-assembly time and drives the *same* fault path proactively -- see
+DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .config import TaijiConfig
+from .errors import InvalidStateError, OutOfMemoryError, PinnedError
+from .mpool import Handle, Mpool
+
+NO_PFN = -1
+
+# flags bits (block-table per-GFN flags)
+F_SPLIT = 1 << 0      # MS mapping split to MP granularity
+F_PINNED = 1 << 1     # never swap (mpool, registered DMA ranges)
+F_ACCESSED = 1 << 2   # accessed since last LRU scan (EPT A-bit analogue)
+
+
+class EPTFault(Exception):
+    """EPT violation: guest touched a non-resident MP."""
+
+    def __init__(self, gfn: int, mp: int) -> None:
+        super().__init__(f"EPT fault gfn={gfn} mp={mp}")
+        self.gfn = gfn
+        self.mp = mp
+
+
+class PhysicalMemory:
+    """The device's physical memory: ``n_phys_ms`` sections of ``ms_bytes``."""
+
+    def __init__(self, cfg: TaijiConfig) -> None:
+        cfg.validate()
+        self.cfg = cfg
+        self.buffer = np.zeros(cfg.n_phys_ms * cfg.ms_bytes, dtype=np.uint8)
+        self._lock = threading.Lock()
+        # slots below mpool_reserve_ms are the pinned metadata arena
+        self._free_slots: List[int] = list(
+            range(cfg.n_phys_ms - 1, cfg.mpool_reserve_ms - 1, -1))
+        self.n_managed = cfg.n_phys_ms - cfg.mpool_reserve_ms
+
+    # ------------------------------------------------------------ allocation
+    def alloc_slot(self) -> int:
+        with self._lock:
+            if not self._free_slots:
+                raise OutOfMemoryError("no free physical MS")
+            return self._free_slots.pop()
+
+    def try_alloc_slot(self) -> Optional[int]:
+        with self._lock:
+            return self._free_slots.pop() if self._free_slots else None
+
+    def free_slot(self, pfn: int) -> None:
+        with self._lock:
+            self._free_slots.append(pfn)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free_slots)
+
+    # ----------------------------------------------------------------- views
+    def ms_view(self, pfn: int) -> np.ndarray:
+        o = pfn * self.cfg.ms_bytes
+        return self.buffer[o : o + self.cfg.ms_bytes]
+
+    def mp_view(self, pfn: int, mp: int) -> np.ndarray:
+        o = pfn * self.cfg.ms_bytes + mp * self.cfg.mp_bytes
+        return self.buffer[o : o + self.cfg.mp_bytes]
+
+    def mpool_arena(self) -> np.ndarray:
+        return self.buffer[: self.cfg.mpool_reserve_ms * self.cfg.ms_bytes]
+
+
+class BlockTable:
+    """The EPT analogue: GFN -> (PFN, flags, per-MP presence).
+
+    Backed by mpool **full pages** (the paper: "68.53% is for full pages
+    (EPT and IOMMU page tables)"). Per-MP presence bitmaps for split
+    mappings live in the owning req's slab allocation; the table holds the
+    huge-granularity word per GFN.
+    """
+
+    def __init__(self, cfg: TaijiConfig, mpool: Mpool) -> None:
+        self.cfg = cfg
+        n = cfg.n_virt_ms
+        self._pfn_pages: List[Handle] = []
+        self._flag_pages: List[Handle] = []
+        per_page = mpool.page_bytes // 4
+        need = (n + per_page - 1) // per_page
+        pfn_views, flag_views = [], []
+        for _ in range(need):
+            hp = mpool.alloc_page()
+            hf = mpool.alloc_page()
+            self._pfn_pages.append(hp)
+            self._flag_pages.append(hf)
+            pfn_views.append(hp.view(np.int32))
+            flag_views.append(hf.view(np.int32))
+        self.pfn = np.concatenate(pfn_views)[:n] if len(pfn_views) > 1 else pfn_views[0][:n]
+        self.flags = (np.concatenate(flag_views)[:n]
+                      if len(flag_views) > 1 else flag_views[0][:n])
+        self.pfn[:] = NO_PFN
+        self.flags[:] = 0
+        self._lock = threading.Lock()
+
+    # NOTE: single-word reads/writes of int32 numpy cells are effectively
+    # atomic under the GIL; multi-field transitions take the lock.
+    def map_huge(self, gfn: int, pfn: int) -> None:
+        with self._lock:
+            self.pfn[gfn] = pfn
+            self.flags[gfn] &= ~F_SPLIT
+
+    def unmap(self, gfn: int) -> None:
+        with self._lock:
+            if self.flags[gfn] & F_PINNED:
+                raise PinnedError(f"gfn {gfn} is pinned")
+            self.pfn[gfn] = NO_PFN
+            self.flags[gfn] &= ~F_SPLIT
+
+    def split(self, gfn: int) -> None:
+        """Exactly-once split at first MP swap-out (paper Fig 8 (4.1))."""
+        with self._lock:
+            if self.flags[gfn] & F_SPLIT:
+                raise InvalidStateError(f"gfn {gfn} already split")
+            self.flags[gfn] |= F_SPLIT
+
+    def merge(self, gfn: int, pfn: int) -> None:
+        """Exactly-once merge after last MP swap-in (paper Fig 8 (7))."""
+        with self._lock:
+            if not self.flags[gfn] & F_SPLIT:
+                raise InvalidStateError(f"gfn {gfn} not split")
+            self.pfn[gfn] = pfn
+            self.flags[gfn] &= ~F_SPLIT
+
+    def map_split(self, gfn: int, pfn: int) -> None:
+        """Install a new physical MS for a split mapping (first MP swap-in)."""
+        with self._lock:
+            self.pfn[gfn] = pfn
+            self.flags[gfn] |= F_SPLIT
+
+    def set_pinned(self, gfn: int, pinned: bool) -> None:
+        with self._lock:
+            if pinned:
+                self.flags[gfn] |= F_PINNED
+            else:
+                self.flags[gfn] &= ~F_PINNED
+
+    def is_pinned(self, gfn: int) -> bool:
+        return bool(self.flags[gfn] & F_PINNED)
+
+    def is_split(self, gfn: int) -> bool:
+        return bool(self.flags[gfn] & F_SPLIT)
+
+    def mark_accessed(self, gfn: int) -> None:
+        self.flags[gfn] |= F_ACCESSED
+
+    def test_and_clear_accessed(self, gfn: int) -> bool:
+        with self._lock:
+            a = bool(self.flags[gfn] & F_ACCESSED)
+            if a:
+                self.flags[gfn] &= ~F_ACCESSED
+            return a
+
+
+class AddressSpace:
+    """GVA->GPA (guest init_mm, identity over the managed region)."""
+
+    def __init__(self, cfg: TaijiConfig) -> None:
+        self.cfg = cfg
+        self.limit = cfg.n_virt_ms * cfg.ms_bytes
+
+    def gva_to_gpa(self, gva: int) -> int:
+        if not 0 <= gva < self.limit:
+            raise ValueError(f"GVA {gva:#x} outside guest address space")
+        return gva  # kernel linear map: GVA == HVA, identity to GPA
+
+    def gpa_to_gfn_mp(self, gpa: int) -> Tuple[int, int, int]:
+        gfn, off = divmod(gpa, self.cfg.ms_bytes)
+        mp, inner = divmod(off, self.cfg.mp_bytes)
+        return gfn, mp, inner
+
+
+class VirtualizationLayer:
+    """Ties PhysicalMemory + Mpool + BlockTable + AddressSpace together.
+
+    Created by the hot-switch (hotswitch.py). Guest accesses go through
+    :meth:`guest_read` / :meth:`guest_write`; the manager's own metadata
+    accesses use :meth:`root_access`.
+    """
+
+    def __init__(self, cfg: TaijiConfig, phys: PhysicalMemory, mpool: Mpool) -> None:
+        self.cfg = cfg
+        self.phys = phys
+        self.mpool = mpool
+        self.aspace = AddressSpace(cfg)
+        self.table = BlockTable(cfg, mpool)
+        # fault handler is installed by the swap engine; None -> faults raise
+        self.fault_handler = None
+
+        # pin + identity-map the mpool arena (GPA == HPA contract)
+        for gfn in range(cfg.mpool_reserve_ms):
+            self.table.map_huge(gfn, gfn)
+            self.table.set_pinned(gfn, True)
+
+    # ---------------------------------------------------------- translation
+    def translate(self, gpa: int) -> Tuple[int, int, int, int]:
+        """GPA -> (gfn, mp, inner, pfn); raises EPTFault if non-resident.
+
+        Lock-free: single-word numpy reads are atomic under the GIL; the
+        worst race (stale split flag) resolves through the fault path,
+        mirroring the hardware EPT walk racing the fault handler.
+        """
+        gfn, mp, inner = self.aspace.gpa_to_gfn_mp(gpa)
+        pfn = int(self.table.pfn[gfn])
+        if pfn == NO_PFN:
+            raise EPTFault(gfn, mp)
+        if int(self.table.flags[gfn]) & F_SPLIT:
+            # per-MP presence is tracked by the req; the engine installs a
+            # presence probe so translation can consult it.
+            probe = getattr(self, "mp_present_probe", None)
+            if probe is not None and not probe(gfn, mp):
+                raise EPTFault(gfn, mp)
+        return gfn, mp, inner, pfn
+
+    # -------------------------------------------------------- guest accesses
+    def _resolve(self, gva: int) -> Tuple[int, int, int, int]:
+        gpa = self.aspace.gva_to_gpa(gva)
+        while True:
+            try:
+                out = self.translate(gpa)
+                break
+            except EPTFault as f:
+                if self.fault_handler is None:
+                    raise
+                self.fault_handler(f.gfn, f.mp)
+        gfn = out[0]
+        self.table.mark_accessed(gfn)
+        return out
+
+    def guest_read(self, gva: int, nbytes: int) -> bytes:
+        gfn, mp, inner, pfn = self._resolve(gva)
+        off = mp * self.cfg.mp_bytes + inner
+        if off + nbytes > self.cfg.ms_bytes:
+            raise ValueError("guest access crosses an MS boundary")
+        # may cross MP boundaries within the MS: fault remaining MPs too
+        end_mp = (off + nbytes - 1) // self.cfg.mp_bytes
+        for m in range(mp + 1, end_mp + 1):
+            self._resolve(gva - inner - mp * self.cfg.mp_bytes + m * self.cfg.mp_bytes)
+        view = self.phys.ms_view(pfn)
+        return bytes(view[off : off + nbytes])
+
+    def guest_write(self, gva: int, data: bytes) -> None:
+        gfn, mp, inner, pfn = self._resolve(gva)
+        off = mp * self.cfg.mp_bytes + inner
+        if off + len(data) > self.cfg.ms_bytes:
+            raise ValueError("guest access crosses an MS boundary")
+        end_mp = (off + len(data) - 1) // self.cfg.mp_bytes
+        for m in range(mp + 1, end_mp + 1):
+            self._resolve(gva - inner - mp * self.cfg.mp_bytes + m * self.cfg.mp_bytes)
+        view = self.phys.ms_view(pfn)
+        view[off : off + len(data)] = np.frombuffer(data, dtype=np.uint8)
+
+    # ----------------------------------------------------------- root access
+    def root_access(self, gpa: int) -> np.ndarray:
+        """Root-mode (single-layer) access: only legal for GPA == HPA memory."""
+        gfn = gpa // self.cfg.ms_bytes
+        if not self.table.is_pinned(gfn) or int(self.table.pfn[gfn]) != gfn:
+            raise InvalidStateError(
+                f"root access to non-identity gfn {gfn}: GPA==HPA violated")
+        return self.phys.ms_view(gfn)
+
+    # ------------------------------------------------------------- utilities
+    @property
+    def free_ms(self) -> int:
+        return self.phys.free_count
+
+    def resident_gfns(self) -> List[int]:
+        return [g for g in range(self.cfg.n_virt_ms)
+                if int(self.table.pfn[g]) != NO_PFN and not self.table.is_pinned(g)]

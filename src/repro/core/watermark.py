@@ -1,0 +1,61 @@
+"""Watermark-based swapping policy (paper §4.2.2 end, Fig 14e / 15a).
+
+    "Three watermarks are set: high, low, and min. Swapping starts when
+     memory drops below low and stops when it rises above high. min marks
+     critically low memory, triggering proactive swap-out during page
+     faults to avoid prolonged low-memory states."
+
+The policy is a pure decision function over the free-MS count; the swap
+engine consults it from the background reclaim task (BACK priority) and
+from the fault path (min watermark).
+"""
+from __future__ import annotations
+
+import threading
+
+from .config import TaijiConfig
+
+
+class WatermarkPolicy:
+    def __init__(self, cfg: TaijiConfig) -> None:
+        self.cfg = cfg
+        managed = cfg.n_phys_ms - cfg.mpool_reserve_ms
+        wm = cfg.watermark
+        self.high_ms = max(1, int(managed * wm.high))
+        self.low_ms = max(1, int(managed * wm.low))
+        self.min_ms = max(0, int(managed * wm.min))
+        self._lock = threading.Lock()
+        self._reclaiming = False
+
+    # ------------------------------------------------------------- decisions
+    def should_start_reclaim(self, free_ms: int) -> bool:
+        """Background reclaim starts below ``low`` (or ``high`` if eager)."""
+        threshold = self.high_ms if self.cfg.watermark.eager_below_high else self.low_ms
+        with self._lock:
+            if free_ms < threshold:
+                self._reclaiming = True
+            return self._reclaiming and free_ms < self.high_ms
+
+    def should_stop_reclaim(self, free_ms: int) -> bool:
+        """Reclaim stops once free memory rises above ``high``."""
+        with self._lock:
+            if free_ms >= self.high_ms:
+                self._reclaiming = False
+                return True
+            return False
+
+    def is_critical(self, free_ms: int) -> bool:
+        """Below ``min``: proactive synchronous swap-out on the fault path."""
+        return free_ms <= self.min_ms
+
+    def reclaim_target(self, free_ms: int) -> int:
+        """How many MSs to reclaim to get back above ``high``."""
+        return max(0, self.high_ms - free_ms)
+
+    @property
+    def reclaiming(self) -> bool:
+        with self._lock:
+            return self._reclaiming
+
+    def describe(self) -> dict:
+        return {"high": self.high_ms, "low": self.low_ms, "min": self.min_ms}

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical layers (DESIGN.md §2).
+
+Each kernel module uses pl.pallas_call with explicit BlockSpec VMEM
+tiling; ops.py exposes jit'd wrappers (interpret=True off-TPU) and ref.py
+holds the pure-jnp oracles the tests sweep against.
+
+  zero_detect      -- zero-block detection (backend fast path, Fig 15c)
+  compress         -- per-MP int8 quantize/dequantize (device swap backend)
+  crc32c           -- Fletcher checksum (swap verification, §7.1; see the
+                      hardware-adaptation note for why not bit-serial CRC)
+  swap_copy        -- batched block gather/scatter via scalar-prefetched
+                      indirection (swap/compaction data path)
+  paged_attention  -- decode attention walking the block table in-kernel
+                      (the EPT walk on the I/O path)
+"""
+from . import ops, ref  # noqa: F401

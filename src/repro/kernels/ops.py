@@ -1,0 +1,31 @@
+"""Jit'd public wrappers for all Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container validates the
+kernel bodies in interpret mode); on a TPU backend the same calls compile
+to Mosaic. The reference oracles live in ref.py; tests sweep
+shapes/dtypes asserting allclose between the two.
+"""
+from __future__ import annotations
+
+import jax
+
+from .compress import block_dequantize, block_quantize
+from .crc32c import fletcher_checksum
+from .paged_attention import paged_decode_attention
+from .swap_copy import gather_blocks, scatter_blocks
+from .zero_detect import zero_detect
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+__all__ = [
+    "zero_detect", "block_quantize", "block_dequantize",
+    "fletcher_checksum", "gather_blocks", "scatter_blocks",
+    "paged_decode_attention", "on_tpu", "default_interpret",
+]

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Fletcher-style weighted checksum parameters (see crc32c.py for why CRC's
+# bit-serial structure does not transfer to the TPU VPU)
+_CHK_P = jnp.uint32(65521)          # largest prime < 2^16 (Adler/Fletcher)
+
+
+def zero_detect(blocks: jnp.ndarray) -> jnp.ndarray:
+    """blocks: (n, elems) -> (n,) bool, True where the block is all zero."""
+    return jnp.all(blocks == 0, axis=-1)
+
+
+def block_quantize(blocks: jnp.ndarray, mps_per_block: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-MP symmetric int8 quantization.
+
+    blocks: (n, elems) float -> (q (n, elems) int8, scales (n, mps) f32).
+    Each block is split into ``mps_per_block`` equal MPs with independent
+    absmax scales (the lossy KV-cache backend; beyond-paper).
+    """
+    n, elems = blocks.shape
+    mp = elems // mps_per_block
+    x = blocks.reshape(n, mps_per_block, mp).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n, elems), scale
+
+
+def block_dequantize(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of block_quantize -> (n, elems) f32."""
+    n, elems = q.shape
+    mps = scales.shape[-1]
+    x = q.reshape(n, mps, elems // mps).astype(jnp.float32)
+    return (x * scales[..., None]).reshape(n, elems)
+
+
+def fletcher_checksum(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Weighted Fletcher-style checksum per block.
+
+    blocks: (n, elems) uint8-valued (any int dtype) ->
+    (n,) uint32 = (sum(x) mod p) | ((sum((i+1) * x) mod p) << 16).
+    Vectorizable (two reductions) with burst-error detection comparable to
+    CRC for the swap-verification use case (paper §7.1).
+    """
+    x = blocks.astype(jnp.uint32) % _CHK_P
+    n, elems = x.shape
+    w = (jnp.arange(elems, dtype=jnp.uint32) + 1) % _CHK_P
+    # chunked reduction: each term < p (~2^16); uint32 safely sums 2^16
+    # terms per chunk before the modular fold
+    chunk = 4096
+    pad = (-elems) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, (0, pad))
+    xc = x.reshape(n, -1, chunk)
+    wc = w.reshape(-1, chunk)
+    s1 = jnp.sum(jnp.sum(xc, axis=-1) % _CHK_P, axis=-1) % _CHK_P
+    s2 = jnp.sum(jnp.sum((xc * wc[None]) % _CHK_P, axis=-1) % _CHK_P,
+                 axis=-1) % _CHK_P
+    return (s1 | (s2 << jnp.uint32(16))).astype(jnp.uint32)
+
+
+def gather_blocks(pool: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """Swap data path: out[i] = pool[indices[i]] (block gather)."""
+    return pool[indices]
+
+
+def scatter_blocks(pool: jnp.ndarray, indices: jnp.ndarray,
+                   blocks: jnp.ndarray) -> jnp.ndarray:
+    """Swap-in data path: pool[indices[i]] = blocks[i]."""
+    return pool.at[indices].set(blocks)
+
+
+def paged_decode_attention(q: jnp.ndarray, kv_pool: jnp.ndarray,
+                           block_table: jnp.ndarray, kv_len: jnp.ndarray,
+                           ) -> jnp.ndarray:
+    """Decode attention through a block table (the EPT walk on the I/O path).
+
+    q: (B, H, hd); kv_pool: (n_blocks, bt, 2, KV, hd);
+    block_table: (B, mbs) int32; kv_len: (B,) int32. Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    _, bt, _, KV, _ = kv_pool.shape
+    mbs = block_table.shape[1]
+    gathered = kv_pool[block_table]                # (B, mbs, bt, 2, KV, hd)
+    seq = gathered.reshape(B, mbs * bt, 2, KV, hd)
+    k, v = seq[:, :, 0], seq[:, :, 1]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(mbs * bt)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,75 @@
+"""Batched block gather/scatter through an indirection table.
+
+This is the swap engine's data path on device: moving a batch of MS-sized
+blocks between pool slots according to the block table (swap-in
+placement, compaction/defragmentation, prefetch). The block indices are
+scalar-prefetched (``PrefetchScalarGridSpec``) so the DMA engine knows the
+source block before the grid step runs -- the Pallas analogue of walking
+the EPT before issuing the copy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks(pool: jnp.ndarray, indices: jnp.ndarray,
+                  *, interpret: bool = True) -> jnp.ndarray:
+    """out[i] = pool[indices[i]].
+
+    pool: (n_pool, elems); indices: (n_out,) int32 -> (n_out, elems).
+    The pool BlockSpec's index_map reads the prefetched indices.
+    """
+    n_out = indices.shape[0]
+    elems = pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out,),
+        in_specs=[pl.BlockSpec((1, elems), lambda i, idx: (idx[i], 0))],
+        out_specs=pl.BlockSpec((1, elems), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, elems), pool.dtype),
+        interpret=interpret,
+    )(indices, pool)
+
+
+def _scatter_kernel(idx_ref, pool_in_ref, blocks_ref, pool_ref):
+    del pool_in_ref                       # aliased with pool_ref
+    pool_ref[...] = blocks_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_blocks(pool: jnp.ndarray, indices: jnp.ndarray,
+                   blocks: jnp.ndarray, *, interpret: bool = True
+                   ) -> jnp.ndarray:
+    """pool[indices[i]] = blocks[i]; returns the updated pool (donated).
+
+    Uses input/output aliasing so untouched pool slots keep their data.
+    """
+    n_out, elems = blocks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out,),
+        in_specs=[pl.BlockSpec((1, elems), lambda i, idx: (idx[i], 0)),
+                  pl.BlockSpec((1, elems), lambda i, idx: (i, 0))],
+        out_specs=pl.BlockSpec((1, elems), lambda i, idx: (idx[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},      # pool input (after prefetch) -> out
+        interpret=interpret,
+    )(indices, pool, blocks)

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this lowers the real step function (train_step /
+prefill_step / serve_step) under the production mesh with explicit
+in/out shardings, compiles it, and records:
+
+  * ``compiled.memory_analysis()``  -- proves the cell fits per-device HBM;
+  * ``compiled.cost_analysis()``    -- HLO FLOPs / bytes for §Roofline;
+  * collective operand bytes parsed from the optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) -- the roofline's collective term.
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``;
+benchmarks/roofline.py and EXPERIMENTS.md read them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_cells, cell_skip_reason, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch import specs as SP
+from repro.models import model as M
+from repro.train import steps
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:%[\w.\-]+|ROOT [%\w.\-]+) = (.*?) ([\w\-]+)\(", line)
+        if not m:
+            continue
+        restype, opname = m.groups()
+        base = opname
+        for c in _COLLECTIVES:
+            if base == c or base.startswith(c + "-start") or base.startswith(c + "."):
+                nbytes = sum(_shape_bytes(t) for t in _SHAPE_RE.findall(restype)
+                             for t in [t[0] + "[" + t[1] + "]"])
+                out[c] += nbytes
+                counts[c] += 1
+                break
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# §Perf hillclimb variants: config/mesh transforms applied on top of the
+# baseline (see EXPERIMENTS.md §Perf for the hypothesis -> result log)
+import dataclasses as _dc
+
+
+def _v_per_seq_pool(cfg):
+    return _dc.replace(cfg, kv_pool_layout="per_seq")
+
+
+def _v_grouped_moe(cfg):
+    return _dc.replace(cfg, moe=_dc.replace(cfg.moe, grouped_dispatch=True))
+
+
+VARIANTS = {
+    # cell A: paged-gather locality for elastic decode
+    "perseq": (_v_per_seq_pool, None),
+    # cell B: grouped MoE dispatch (shard-local sorts)
+    "groupedmoe": (_v_grouped_moe, None),
+    # cell C: same 256 chips, (32 data x 8 model) logical view so 40-head
+    # attention shards (heads 40%8==0, kv 8%8==0, batch 256%32==0)
+    "mesh32x8": (None, (32, 8)),
+    # combos for further iterations
+    "groupedmoe_mesh32x8": (_v_grouped_moe, (32, 8)),
+}
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  variant: str = ""):
+    cfg = get_config(arch)
+    mesh_shape = None
+    if variant:
+        fn, mesh_shape = VARIANTS[variant]
+        if fn is not None:
+            cfg = fn(cfg)
+    shape = SHAPES[shape_name]
+    if mesh_shape is not None:
+        assert not multi_pod, "variant meshes are single-pod"
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(cfg, mesh, pod_axis="pod" if multi_pod else None)
+    opt_cfg = SP.opt_config(cfg)
+
+    from repro import shard_ctx
+    import contextlib
+    ctx = rules.make_axis_ctx(batch=shape.global_batch)
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(shard_ctx.use(ctx))
+        stack.enter_context(mesh)
+        return _build_lowered_inner(cfg, shape, mesh, rules, opt_cfg)
+
+
+def _build_lowered_inner(cfg, shape, mesh, rules, opt_cfg):
+    if True:
+        if shape.kind == "train":
+            state_sds = SP.state_specs(cfg)
+            batch_sds = SP.input_specs(cfg, shape)
+            state_sh = rules.named(rules.state_pspecs(state_sds))
+            batch_sh = rules.named(rules.batch_pspecs(batch_sds))
+            fn = functools.partial(steps.train_step, cfg=cfg, opt_cfg=opt_cfg)
+            jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            params_sds = jax.eval_shape(
+                lambda r: M.init_params(r, cfg),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            batch_sds = SP.input_specs(cfg, shape)
+            params_sh = rules.named(rules.param_pspecs(params_sds))
+            batch_sh = rules.named(rules.batch_pspecs(batch_sds))
+            fn = functools.partial(steps.prefill_step, cfg=cfg)
+            jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            params_sds = jax.eval_shape(
+                lambda r: M.init_params(r, cfg),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            B, S = shape.global_batch, shape.seq_len
+            cache_sds = SP.cache_specs(cfg, B, S)
+            in_sds = SP.input_specs(cfg, shape)
+            params_sh = rules.named(rules.param_pspecs(params_sds))
+            cache_sh = rules.named(rules.cache_pspecs(cache_sds, B))
+            tok_sh = rules.named(
+                rules.batch_pspecs({"tokens": in_sds["tokens"]}))["tokens"]
+            if "mrope_pos" in in_sds:
+                mp_sh = rules.named(
+                    rules.batch_pspecs({"mrope_pos": in_sds["mrope_pos"]}))["mrope_pos"]
+
+                def fn(params, tokens, cache, mrope_pos):
+                    return steps.serve_step(params, tokens, cache, cfg,
+                                            mrope_pos=mrope_pos)
+                jitted = jax.jit(fn, in_shardings=(params_sh, tok_sh,
+                                                   cache_sh, mp_sh),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_sds, in_sds["tokens"],
+                                       cache_sds, in_sds["mrope_pos"])
+            else:
+                def fn(params, tokens, cache):
+                    return steps.serve_step(params, tokens, cache, cfg)
+                jitted = jax.jit(fn, in_shardings=(params_sh, tok_sh, cache_sh),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_sds, in_sds["tokens"], cache_sds)
+    return lowered, mesh, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             print_analysis: bool = True, variant: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if variant:
+        mesh_name += f"__{variant}"
+    t0 = time.time()
+    lowered, mesh, cfg = build_lowered(arch, shape_name, multi_pod, variant)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # loop-trip-aware roofline inputs (cost_analysis counts scan bodies once)
+    from repro.launch import hlo_analysis as HA
+    loop_cost = HA.analyze(hlo)
+    terms = HA.roofline_terms(loop_cost)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": mesh.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0) if cost else None,
+        "collectives": coll,
+        "loop_aware": {
+            "flops_per_device": loop_cost.flops,
+            "hbm_bytes_per_device": loop_cost.hbm_bytes,
+            "collective_bytes_per_device": loop_cost.collective_bytes,
+            "collective_by_type": loop_cost.collective_by_type,
+        },
+        "roofline": terms,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory_analysis": None,
+    }
+    if mem is not None:
+        result["memory_analysis"] = {
+            k: getattr(mem, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    if print_analysis:
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print("  memory_analysis:", result["memory_analysis"])
+        print("  loop-aware: flops=%.3e hbm=%.3e coll=%.3e (per device)"
+              % (loop_cost.flops, loop_cost.hbm_bytes,
+                 loop_cost.collective_bytes))
+        print("  roofline: compute=%.3fs memory=%.3fs collective=%.3fs "
+              "dominant=%s fraction=%.3f"
+              % (terms["compute_s"], terms["memory_s"], terms["collective_s"],
+                 terms["dominant"], terms["roofline_fraction"]))
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    out = ART_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+    out.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="", choices=[""] + list(VARIANTS))
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a, s, skip in all_cells():
+            if skip:
+                print(f"SKIP {a} x {s}: {skip}")
+                continue
+            cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        skip = cell_skip_reason(args.arch, args.shape)
+        if skip:
+            print(f"SKIP {args.arch} x {args.shape}: {skip}")
+            return
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            if args.skip_existing and (
+                    ART_DIR / f"{arch}__{shape}__{mesh_name}.json").exists():
+                print(f"EXISTS {arch} x {shape} x {mesh_name}")
+                continue
+            try:
+                run_cell(arch, shape, mp, variant=args.variant)
+            except Exception as e:  # record failures, keep going
+                failures.append((arch, shape, mesh_name, repr(e)))
+                print(f"FAIL {arch} x {shape} x {mesh_name}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nDRY-RUN OK")
+
+
+if __name__ == "__main__":
+    main()

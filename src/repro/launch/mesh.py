@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to build these meshes on CPU; smoke tests and benches see 1 device.
+
+Production target: TPU v5e pods -- 16 x 16 = 256 chips per pod
+(("data", "model")), and 2 pods = 512 chips multi-pod
+(("pod", "data", "model")). At >2 pods the same function takes
+``pods=N``; the pod axis is the scale-out axis (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, pods: int = 2):
+    if multi_pod:
+        shape = (pods, 16, 16)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (16, 16)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (examples, tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for a cell;
+``state_specs``/``cache_specs`` build the abstract TrainState / decode
+cache. The dry-run lowers against these (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+from repro.train import steps
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if kind == "decode":
+        out = {"tokens": SDS((B,), jnp.int32)}
+        if cfg.mrope_sections is not None:
+            out["mrope_pos"] = SDS((3, B, 1), jnp.int32)
+        return out
+
+    out: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        out["features"] = SDS((B, S, cfg.frontend_dim), jnp.float32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = SDS((B, cfg.max_vision_tokens, cfg.d_model),
+                                   jnp.float32)
+        out["mrope_pos"] = SDS((3, B, S), jnp.int32)
+    if kind == "train":
+        out["labels"] = SDS((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            out["loss_mask"] = SDS((B, S), jnp.float32)
+    return out
+
+
+def opt_config(cfg: ArchConfig) -> adamw.AdamWConfig:
+    return adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+
+
+def state_specs(cfg: ArchConfig) -> Any:
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda r: steps.init_train_state(r, cfg, opt_config(cfg)), rng)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, max_seq))

@@ -1,0 +1,122 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher/dry-run installs an
+:class:`AxisCtx` describing the active mesh axes, and the model applies
+``constrain*`` hints at the key activation cut points (embeddings, per-
+layer residual stream, attention heads, MoE dispatch, logits). With no
+context installed (single-device smoke tests) every helper is a no-op.
+
+These constraints are what keep XLA's SPMD propagation from replicating
+the (tokens x vocab) logits or the MoE dispatch buffers -- see
+EXPERIMENTS.md §Perf for the measured before/after.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    batch: Any = None          # axis (or tuple) sharding the batch dim
+    tp: Optional[str] = None   # tensor-parallel axis name
+    seq: Optional[str] = None  # sequence-parallel axis (long-context cells)
+    heads_ok: bool = False     # n_heads divisible by tp
+    kv_heads_ok: bool = False
+    vocab_ok: bool = False
+    d_inner_ok: bool = False
+    experts_ok: bool = False
+    ffn_ok: bool = False
+
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_axis_ctx",
+                                                      default=None)
+
+
+def current() -> Optional[AxisCtx]:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[AxisCtx]):
+    token = _CTX.set(ctx)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _constrain(x, spec: P):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def act(x):
+    """Residual stream (B, S, D) or (B, D)."""
+    c = current()
+    if c is None or c.batch is None:
+        return x
+    return _constrain(x, P(c.batch, *([None] * (x.ndim - 1))))
+
+
+def heads(x, kv: bool = False):
+    """Per-head activations (B, S, H, hd)."""
+    c = current()
+    if c is None:
+        return x
+    ok = c.kv_heads_ok if kv else c.heads_ok
+    tp = c.tp if ok else None
+    if c.batch is None and tp is None:
+        return x
+    return _constrain(x, P(c.batch, None, tp, None))
+
+
+def logits(x):
+    """(.., V): vocab over tp when divisible."""
+    c = current()
+    if c is None:
+        return x
+    tp = c.tp if c.vocab_ok else None
+    if c.batch is None and tp is None:
+        return x
+    return _constrain(x, P(c.batch, *([None] * (x.ndim - 2)), tp))
+
+
+def moe_dispatch(x):
+    """(E, C, D/F): experts over tp, capacity over batch axes."""
+    c = current()
+    if c is None:
+        return x
+    tp = c.tp if c.experts_ok else None
+    if tp is None and c.batch is None:
+        return x
+    return _constrain(x, P(tp, c.batch, None))
+
+
+def mamba_inner(x):
+    """(B, S, DI, DS) scan tensors: d_inner over tp."""
+    c = current()
+    if c is None:
+        return x
+    tp = c.tp if c.d_inner_ok else None
+    if tp is None and c.batch is None:
+        return x
+    return _constrain(x, P(c.batch, None, tp, None))
+
+
+def ffn_hidden(x):
+    """(B, S, F): FFN hidden over tp."""
+    c = current()
+    if c is None:
+        return x
+    tp = c.tp if c.ffn_ok else None
+    if tp is None and c.batch is None:
+        return x
+    return _constrain(x, P(c.batch, *([None] * (x.ndim - 2)), tp))

@@ -1,0 +1,57 @@
+"""Train / prefill / decode step functions over a TrainState.
+
+These are the functions the launcher jits with explicit shardings and the
+dry-run lowers for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray            # i32 scalar
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_train_state(rng: jax.Array, cfg: ArchConfig,
+                     opt_cfg: adamw.AdamWConfig) -> TrainState:
+    params = M.init_params(rng, cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32),
+                      params=params, opt=adamw.init(params, opt_cfg))
+
+
+def train_step(state: TrainState, batch: Dict[str, jnp.ndarray],
+               cfg: ArchConfig, opt_cfg: adamw.AdamWConfig
+               ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+    def loss(params):
+        l, metrics = M.loss_fn(params, cfg, batch)
+        return l, metrics
+
+    (loss_val, metrics), grads = jax.value_and_grad(loss, has_aux=True)(state.params)
+    new_params, new_opt, opt_metrics = adamw.update(
+        grads, state.opt, state.params, state.step, opt_cfg)
+    metrics = dict(metrics)
+    metrics.update(opt_metrics)
+    metrics["loss"] = loss_val
+    return TrainState(state.step + 1, new_params, new_opt), metrics
+
+
+def prefill_step(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefill forward -> (last-token logits (B,V), aux)."""
+    return M.prefill(params, cfg, batch)
+
+
+def serve_step(params, tokens: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               cfg: ArchConfig, mrope_pos=None
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step: new token for every sequence against its KV/state."""
+    return M.decode_step(params, cfg, tokens, cache, mrope_pos)

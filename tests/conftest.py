@@ -1,0 +1,8 @@
+import os
+import sys
+
+# kernels + models run on the single host CPU device in tests; the 512-
+# device override belongs ONLY to the dry-run (see launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,151 @@
+"""Hot-switch (paper §4.1.2, Fig 6) + hot-upgrade (§4.4, Fig 10)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (EngineModule, EngineModuleV2, EntryOps,
+                        PlainMemorySystem, hot_switch, hot_upgrade,
+                        install_module, small_test_config)
+from repro.core.errors import ABIMismatchError
+
+
+class Service(threading.Thread):
+    """A running workload: continuous read/write through the accessor."""
+
+    def __init__(self, plain, pcpu, pfns):
+        super().__init__(daemon=True)
+        self.plain = plain
+        self.pcpu = pcpu
+        self.pfns = pfns
+        self.ops = 0
+        self.errors = []
+        self.stop_flag = threading.Event()
+
+    def run(self):
+        ms = self.plain.cfg.ms_bytes
+        off = 64 + 32 * self.pcpu         # disjoint region per service
+        i = 0
+        while not self.stop_flag.is_set():
+            p = self.pfns[i % len(self.pfns)]
+            payload = (self.ops % 251).to_bytes(1, "little") * 16
+            try:
+                self.plain.write(self.pcpu, p * ms + off, payload)
+                got = self.plain.read(self.pcpu, p * ms + off, 16)
+                assert got == payload, (got, payload)
+                self.ops += 1
+            except Exception as e:      # pragma: no cover
+                self.errors.append(e)
+                break
+            i += 1
+
+
+def test_hot_switch_is_transparent_to_running_services():
+    plain = PlainMemorySystem(small_test_config())
+    pfns = [plain.alloc_ms() for _ in range(6)]
+    for i, p in enumerate(pfns):
+        plain.write(0, p * plain.cfg.ms_bytes, bytes([i + 1]) * 128)
+
+    services = [Service(plain, pcpu, pfns) for pcpu in range(2)]
+    for sv in services:
+        sv.start()
+    time.sleep(0.05)
+
+    stages = []
+    system = hot_switch(plain, on_stage=lambda c, s: stages.append((c, s)))
+    time.sleep(0.1)
+
+    for sv in services:
+        sv.stop_flag.set()
+    for sv in services:
+        sv.join(2)
+
+    assert all(not sv.errors for sv in services)
+    assert all(sv.ops > 0 for sv in services)
+    # two-stage switch ran per PCPU
+    assert stages.count((0, "stage1")) == 1 and stages.count((0, "stage2")) == 1
+    # original contents preserved (services overwrote offset 64 only)
+    for i, p in enumerate(pfns):
+        assert plain.read(0, p * plain.cfg.ms_bytes, 16) == bytes([i + 1]) * 16
+    # and the memory is now swappable -- the point of the switch
+    assert system.engine.swap_out_ms(pfns[0]) == system.cfg.mps_per_ms
+    assert plain.read(0, pfns[0] * plain.cfg.ms_bytes, 16) == bytes([1]) * 16
+    system.close()
+
+
+def test_hot_upgrade_under_load_carries_state():
+    plain = PlainMemorySystem(small_test_config())
+    pfns = [plain.alloc_ms() for _ in range(6)]
+    system = hot_switch(plain)
+    entry = EntryOps()
+    install_module(system, entry, EngineModule(system))
+    assert entry.call("version") == 1
+
+    # swap some memory out under v1 so there is real metadata to inherit
+    data = bytes(range(256)) * (system.cfg.ms_bytes // 256)
+    system.write(system.ms_addr(pfns[1]), data)
+    entry.call("swap_out_ms", pfns[1])
+
+    sv = Service(plain, 0, pfns[2:])
+    sv.start()
+    time.sleep(0.02)
+
+    hot_upgrade(system, entry, EngineModuleV2(system))
+
+    sv.stop_flag.set()
+    sv.join(2)
+    assert not sv.errors and sv.ops > 0
+    assert entry.call("version") == 2
+    assert system.module_version == 2
+    # v1's swapped-out metadata is directly usable by v2 (no conversion)
+    assert system.read(system.ms_addr(pfns[1]), len(data)) == data
+    system.close()
+
+
+def test_incompatible_abi_refused():
+    plain = PlainMemorySystem(small_test_config())
+    system = hot_switch(plain)
+    entry = EntryOps()
+    install_module(system, entry, EngineModule(system))
+
+    class BadModule(EngineModule):
+        VERSION = 99
+        ABI = 999                      # incompatible metadata layout
+
+    with pytest.raises(ABIMismatchError):
+        hot_upgrade(system, entry, BadModule(system))
+    assert entry.call("version") == 1  # old module still serving
+    system.close()
+
+
+def test_entry_ops_drain_before_swap():
+    entry = EntryOps()
+    release = threading.Event()
+    entered = threading.Event()
+
+    def slow_op():
+        entered.set()
+        release.wait(2)
+        return "old"
+
+    entry.register("op", slow_op)
+    results = []
+    t = threading.Thread(target=lambda: results.append(entry.call("op")))
+    t.start()
+    entered.wait(2)
+
+    swapped = threading.Event()
+
+    def do_swap():
+        entry.swap_all({"op": lambda: "new"})
+        swapped.set()
+
+    t2 = threading.Thread(target=do_swap)
+    t2.start()
+    time.sleep(0.05)
+    assert not swapped.is_set()        # waits for the in-flight call
+    release.set()
+    t.join(2)
+    t2.join(2)
+    assert results == ["old"]
+    assert entry.call("op") == "new"

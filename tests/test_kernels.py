@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n,elems,tile", [(4, 1024, 512), (8, 4096, 4096),
+                                          (3, 512, 128), (16, 256, 256)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, np.int8])
+def test_zero_detect_sweep(n, elems, tile, dtype):
+    x = RNG.standard_normal((n, elems)).astype(dtype)
+    x[::3] = 0
+    got = ops.zero_detect(jnp.asarray(x), tile_elems=tile)
+    want = ref.zero_detect(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,elems,mps", [(2, 512, 4), (4, 1024, 8),
+                                         (1, 2048, 16), (6, 768, 3)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_quantize_roundtrip_sweep(n, elems, mps, dtype):
+    x = (RNG.standard_normal((n, elems)) * 4).astype(dtype)
+    x[0, :elems // mps] = 0                       # a zero MP
+    q, s = ops.block_quantize(jnp.asarray(x), mps)
+    qr, sr = ref.block_quantize(jnp.asarray(x), mps)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = ops.block_dequantize(q, s)
+    # bounded quantization error (beyond-paper lossy KV backend contract)
+    assert np.abs(np.asarray(d) - x.astype(np.float32)).max() <= \
+        np.abs(x).max() / 127.0 + 1e-6
+
+
+@pytest.mark.parametrize("n,elems,tile", [(4, 4096, 1024), (2, 512, 512),
+                                          (8, 2048, 256)])
+def test_fletcher_sweep_and_sensitivity(n, elems, tile):
+    b = RNG.integers(0, 256, (n, elems)).astype(np.uint8)
+    got = ops.fletcher_checksum(jnp.asarray(b), tile_elems=tile)
+    want = ref.fletcher_checksum(jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # single-byte corruption always detected; swap of two adjacent bytes too
+    b2 = b.copy()
+    b2[0, 7] ^= 1
+    assert np.asarray(ops.fletcher_checksum(jnp.asarray(b2)))[0] != \
+        np.asarray(got)[0]
+    b3 = b.copy()
+    if b3[1, 10] != b3[1, 11]:
+        b3[1, 10], b3[1, 11] = b[1, 11], b[1, 10]
+        assert np.asarray(ops.fletcher_checksum(jnp.asarray(b3)))[1] != \
+            np.asarray(got)[1]
+
+
+@pytest.mark.parametrize("n_pool,elems,n_out", [(16, 512, 4), (8, 256, 8),
+                                                (32, 1024, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_gather_scatter_sweep(n_pool, elems, n_out, dtype):
+    pool = RNG.standard_normal((n_pool, elems)).astype(dtype)
+    idx = RNG.choice(n_pool, size=n_out, replace=False).astype(np.int32)
+    got = ops.gather_blocks(jnp.asarray(pool), jnp.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.gather_blocks(pool, idx)))
+    blocks = RNG.standard_normal((n_out, elems)).astype(dtype)
+    got2 = ops.scatter_blocks(jnp.asarray(pool.copy()), jnp.asarray(idx),
+                              jnp.asarray(blocks))
+    want2 = ref.scatter_blocks(jnp.asarray(pool), jnp.asarray(idx),
+                               jnp.asarray(blocks))
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+
+
+@pytest.mark.parametrize("B,H,KV,hd,bt,mbs", [
+    (2, 8, 2, 32, 8, 4),
+    (1, 4, 4, 64, 16, 2),      # MHA
+    (3, 16, 1, 32, 8, 3),      # MQA
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_paged_attention_sweep(B, H, KV, hd, bt, mbs, dtype):
+    q = RNG.standard_normal((B, H, hd)).astype(dtype)
+    pool = RNG.standard_normal((B * mbs + 2, bt, 2, KV, hd)).astype(dtype)
+    # non-trivial block table: blocks assigned in random pool order
+    perm = RNG.permutation(B * mbs).astype(np.int32) + 2
+    table = perm.reshape(B, mbs)
+    kvlen = RNG.integers(1, mbs * bt + 1, (B,)).astype(np.int32)
+    got = ops.paged_decode_attention(jnp.asarray(q), jnp.asarray(pool),
+                                     jnp.asarray(table), jnp.asarray(kvlen))
+    want = ref.paged_decode_attention(jnp.asarray(q), jnp.asarray(pool),
+                                      jnp.asarray(table), jnp.asarray(kvlen))
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

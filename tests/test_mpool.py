@@ -1,0 +1,64 @@
+"""mpool: pinned metadata arena (paper §4.1.1, Fig 13a)."""
+import numpy as np
+import pytest
+
+from repro.core.errors import MpoolExhaustedError
+from repro.core.mpool import Mpool
+
+
+def make_pool(pages=8, page_bytes=1024):
+    return Mpool(np.zeros(pages * page_bytes, dtype=np.uint8), page_bytes)
+
+
+def test_page_alloc_free_cycle():
+    p = make_pool()
+    pages = [p.alloc_page() for _ in range(8)]
+    with pytest.raises(MpoolExhaustedError):
+        p.alloc_page()
+    offsets = {h.offset for h in pages}
+    assert len(offsets) == 8
+    for h in pages:
+        p.free_page(h)
+    assert p.stats()["used_bytes"] == 0
+    p.alloc_page()  # reusable
+
+
+def test_slab_size_classes_and_reuse():
+    p = make_pool()
+    a = p.slab_alloc(40)       # -> 64B class
+    b = p.slab_alloc(64)
+    assert a.nbytes == 64 and b.nbytes == 64
+    # same class shares a page
+    assert a.offset // 1024 == b.offset // 1024
+    c = p.slab_alloc(100)      # -> 128B class, different page
+    assert c.offset // 1024 != a.offset // 1024
+    p.slab_free(a)
+    d = p.slab_alloc(33)
+    assert d.offset == a.offset      # slot reused
+    stats = p.stats()
+    assert stats["slab_bytes"] == 64 * 2 + 128
+
+
+def test_views_are_arena_backed_and_zeroed():
+    p = make_pool()
+    h = p.slab_alloc(64)
+    v = h.view(np.uint32)
+    assert v.sum() == 0
+    v[:] = 0xDEAD
+    # re-attached view sees the same bytes (hot-upgrade inheritance)
+    from repro.core.mpool import Handle
+    h2 = Handle(p, h.offset, h.nbytes)
+    assert (h2.view(np.uint32) == 0xDEAD).all()
+
+
+def test_accounting_split():
+    p = make_pool(pages=16)
+    p.alloc_page()
+    p.alloc_page()
+    for _ in range(5):
+        p.slab_alloc(200)
+    s = p.stats()
+    assert s["full_page_bytes"] == 2048
+    assert s["slab_bytes"] == 5 * 256
+    assert 0 < s["utilization"] < 1
+    assert abs(s["full_page_fraction"] + s["slab_fraction"] - 1.0) < 1e-9

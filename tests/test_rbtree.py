@@ -1,0 +1,46 @@
+"""Property tests for the req red-black tree (paper Fig 8 (1.1-1.3))."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.rbtree import RBTree
+
+
+@given(st.lists(st.integers(0, 10_000), unique=True, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_insert_find_invariants(keys):
+    t = RBTree()
+    for k in keys:
+        t.insert(k, k * 2)
+    t.check_invariants()
+    assert len(t) == len(keys)
+    for k in keys:
+        assert t.find(k) == k * 2
+    assert [k for k, _ in t.items()] == sorted(keys)
+
+
+@given(st.lists(st.integers(0, 1000), unique=True, min_size=1, max_size=120),
+       st.data())
+@settings(max_examples=60, deadline=None)
+def test_delete_keeps_invariants(keys, data):
+    t = RBTree()
+    for k in keys:
+        t.insert(k, str(k))
+    to_del = data.draw(st.lists(st.sampled_from(keys), unique=True))
+    for k in to_del:
+        assert t.delete(k) == str(k)
+        t.check_invariants()
+    remaining = sorted(set(keys) - set(to_del))
+    assert [k for k, _ in t.items()] == remaining
+    for k in to_del:
+        assert t.find(k) is None
+
+
+@given(st.lists(st.integers(0, 1000), unique=True, min_size=1, max_size=80),
+       st.integers(0, 1001))
+@settings(max_examples=60, deadline=None)
+def test_floor_lookup(keys, probe):
+    t = RBTree()
+    for k in keys:
+        t.insert(k, k)
+    expect = max((k for k in keys if k <= probe), default=None)
+    assert t.floor(probe) == expect

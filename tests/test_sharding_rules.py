@@ -1,0 +1,101 @@
+"""Sharding rules: divisibility guards, FSDP/TP assignment, batch fitting."""
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.sharding import ShardingRules
+from repro.launch import specs as SP
+from repro.models import model as M
+
+
+def mesh16x16():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def mesh_pod():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def pspec_of(tree, *path):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def test_gqa_heads_sharded_when_divisible():
+    cfg = get_config("qwen3-4b")                 # 32 heads, kv 8
+    rules = ShardingRules(cfg, mesh16x16())
+    shapes = M.param_shapes(cfg)
+    specs = rules.param_pspecs(shapes)
+    assert pspec_of(specs, "layers", "attn", "wq") == P(None, "data", "model")
+    # kv heads 8 < 16: kv projections stay unsharded on model
+    assert pspec_of(specs, "layers", "attn", "wk") == P(None, "data", None)
+
+
+def test_nondivisible_heads_left_unsharded():
+    cfg = get_config("qwen2-0.5b")               # 14 heads
+    rules = ShardingRules(cfg, mesh16x16())
+    specs = rules.param_pspecs(M.param_shapes(cfg))
+    assert pspec_of(specs, "layers", "attn", "wq") == P(None, "data", None)
+    # but the MLP hidden (4864 = 16*304) is TP-sharded
+    assert pspec_of(specs, "layers", "mlp", "w_gate") == P(None, "data", "model")
+
+
+def test_moe_experts_sharded_over_model():
+    cfg = get_config("qwen3-moe-235b-a22b")      # 128 experts
+    rules = ShardingRules(cfg, mesh16x16())
+    specs = rules.param_pspecs(M.param_shapes(cfg))
+    assert pspec_of(specs, "layers", "moe", "w_gate")[1] == "model"
+    assert pspec_of(specs, "layers", "moe", "w_down")[1] == "model"
+
+
+def test_mamba_d_inner_sharded():
+    cfg = get_config("falcon-mamba-7b")
+    rules = ShardingRules(cfg, mesh16x16())
+    specs = rules.param_pspecs(M.param_shapes(cfg))
+    assert pspec_of(specs, "layers", "mamba", "in_proj") == P(None, "data", "model")
+    assert pspec_of(specs, "layers", "mamba", "out_proj") == P(None, "model", "data")
+
+
+def test_batch_specs_fit_small_batches():
+    cfg = get_config("jamba-1.5-large-398b")
+    rules = ShardingRules(cfg, mesh_pod(), pod_axis="pod")
+    from repro.configs import SHAPES
+    # long_500k decode: B=1 cannot shard over (pod, data)
+    sds = SP.input_specs(cfg, SHAPES["long_500k"])
+    specs = rules.batch_pspecs(sds)
+    assert specs["tokens"] == P(None)
+    # train batch 256 shards over (pod, data)
+    sds = SP.input_specs(cfg, SHAPES["train_4k"])
+    specs = rules.batch_pspecs(sds)
+    assert specs["tokens"][0] == ("pod", "data")
+
+
+def test_cache_specs_shard_pool_blocks():
+    cfg = get_config("qwen3-4b")
+    rules = ShardingRules(cfg, mesh16x16())
+    cache_sds = SP.cache_specs(cfg, 128, 32768)
+    specs = rules.cache_pspecs(cache_sds, 128)
+    assert specs["kv_pool"][1] == "data"
+    assert specs["block_table"] == P("data", None)
+
+
+def test_state_specs_cover_opt_state():
+    cfg = get_config("qwen2-0.5b")
+    rules = ShardingRules(cfg, mesh16x16())
+    st = SP.state_specs(cfg)
+    sp = rules.state_pspecs(st)
+    assert sp.step == P()
+    assert jax.tree.structure(sp.opt.mu) == jax.tree.structure(sp.params)
+
+
+def test_axis_ctx_flags():
+    cfg = get_config("qwen2-0.5b")
+    rules = ShardingRules(cfg, mesh16x16())
+    ctx = rules.make_axis_ctx(batch=256)
+    assert not ctx.heads_ok          # 14 heads
+    assert ctx.vocab_ok              # 151936 % 16 == 0
+    assert ctx.ffn_ok                # 4864 % 16 == 0
+    ctx1 = rules.make_axis_ctx(batch=1)
+    assert ctx1.batch is None        # B=1 unshardable

@@ -1,0 +1,169 @@
+"""Substrate: data pipeline, optimizer, checkpoint, metrics, HLO analyzer."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.reduce import reduced_config
+from repro.core.metrics import LatencyHistogram
+from repro.data.pipeline import SyntheticPipeline
+from repro.launch import hlo_analysis as HA
+from repro.optim import adamw
+from repro.train import steps
+
+
+# ------------------------------------------------------------ data pipeline
+def test_pipeline_deterministic_and_resumable():
+    cfg = reduced_config("qwen3-4b")
+    p1 = SyntheticPipeline(cfg, 2, 16, seed=7)
+    b1 = [p1.next_batch() for _ in range(3)]
+    p2 = SyntheticPipeline(cfg, 2, 16, seed=7)
+    p2.restore({"seed": 7, "step": 2})
+    b2 = p2.next_batch()
+    np.testing.assert_array_equal(b1[2]["tokens"], b2["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    cfg = reduced_config("qwen3-4b")
+    p = SyntheticPipeline(cfg, 2, 16, seed=0)
+    b = p.next_batch()
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+
+def test_pipeline_vlm_masks_vision_prefix():
+    cfg = reduced_config("qwen2-vl-2b")
+    p = SyntheticPipeline(cfg, 2, 24, seed=0)
+    b = p.next_batch()
+    nv = cfg.max_vision_tokens
+    assert (b["loss_mask"][:, :nv] == 0).all()
+    assert (b["loss_mask"][:, nv:] == 1).all()
+    assert b["mrope_pos"].shape == (3, 2, 24)
+    # h/w axes differ across the vision grid (M-RoPE is really 3D)
+    assert not np.array_equal(b["mrope_pos"][1, 0, :nv],
+                              b["mrope_pos"][2, 0, :nv])
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params, cfg)
+    for step in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, info = adamw.update(grads, state, params,
+                                           jnp.asarray(step), cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_clips_gradient():
+    cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    _, _, info = adamw.update({"w": jnp.full(3, 100.0)}, state, params,
+                              jnp.asarray(0), cfg)
+    assert float(info["grad_norm"]) > 100
+
+
+def test_adamw_bf16_state_dtype():
+    cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    params = {"w": jnp.zeros(4, jnp.float32)}
+    state = adamw.init(params, cfg)
+    assert state.mu["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg = reduced_config("qwen2-0.5b")
+    opt_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+    state = steps.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    pipe = SyntheticPipeline(cfg, 2, 8, seed=3)
+    pipe.next_batch()
+
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(5, state, pipe.snapshot())
+    mgr.save(10, state, pipe.snapshot())
+    mgr.save(15, state, pipe.snapshot())
+    assert mgr.latest_step() == 15
+    # keep=2 garbage-collects the oldest
+    assert not (tmp_path / "step_0000000005").exists()
+
+    restored, manifest = mgr.restore(state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["pipeline"]["step"] == 1
+
+
+def test_checkpoint_layout_mismatch_refused(tmp_path):
+    cfg = reduced_config("qwen2-0.5b")
+    opt_cfg = adamw.AdamWConfig()
+    state = steps.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, state)
+    other = reduced_config("qwen3-4b")
+    state2 = steps.init_train_state(jax.random.PRNGKey(0), other,
+                                    adamw.AdamWConfig())
+    with pytest.raises(ValueError):
+        mgr.restore(state2)
+
+
+# ------------------------------------------------------------------ metrics
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for ns in [500] * 90 + [100_000] * 10:
+        h.record(ns)
+    assert h.percentile(0.5) <= 1024
+    assert h.percentile(0.95) >= 65536
+    assert 0.89 <= h.fraction_below(10_000) <= 0.91
+
+
+# ------------------------------------------------------------- HLO analyzer
+_TOY_HLO = """
+HloModule toy
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analyzer_multiplies_loop_trips():
+    cost = HA.analyze(_TOY_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x10 trips
+    assert cost.flops == pytest.approx(10 * 1024)
+    # all-reduce result: 8*8*4 bytes, x10
+    assert cost.collective_bytes == pytest.approx(10 * 256)
+    assert cost.collective_by_type["all-reduce"] == pytest.approx(2560)
+
+
+def test_roofline_terms_shape():
+    cost = HA.analyze(_TOY_HLO)
+    t = HA.roofline_terms(cost)
+    assert set(t) >= {"compute_s", "memory_s", "collective_s", "dominant",
+                      "roofline_fraction"}
+    assert t["dominant"] in ("compute_s", "memory_s", "collective_s")

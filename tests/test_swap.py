@@ -1,0 +1,203 @@
+"""Parallel swap engine (paper §4.2.2, Fig 8): correctness + concurrency."""
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.config import small_test_config
+from repro.core.errors import CorruptionError, PinnedError
+from repro.core.ms import MS_PARTIAL, MS_RESIDENT, MS_SWAPPED
+from repro.core.system import TaijiSystem
+
+
+def fresh(**kw):
+    return TaijiSystem(small_test_config(**kw))
+
+
+def fill(s, g, seed):
+    data = np.random.default_rng(seed).integers(
+        0, 256, s.cfg.ms_bytes).astype(np.uint8).tobytes()
+    s.write(s.ms_addr(g), data)
+    return data
+
+
+# ------------------------------------------------------------ round trips
+def test_full_swap_roundtrip_exact():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    data = fill(s, g, 1)
+    assert s.engine.swap_out_ms(g) == s.cfg.mps_per_ms
+    req = s.reqs.lookup(g)
+    assert req.record.state == MS_SWAPPED
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    # reading every MP merged the MS back
+    assert req.record.state == MS_RESIDENT
+    assert s.metrics.ms_swapped_in == 1
+
+
+def test_zero_pages_take_zero_backend():
+    s = fresh()
+    g = s.guest_alloc_ms()                 # zero-filled by alloc
+    s.engine.swap_out_ms(g)
+    assert s.metrics.backend_zero_mps == s.cfg.mps_per_ms
+    assert s.read(s.ms_addr(g), 32) == b"\x00" * 32
+
+
+def test_partial_fault_leaves_consistent_split_state():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    data = fill(s, g, 2)
+    s.engine.swap_out_ms(g)
+    # fault only MP 3
+    off = 3 * s.cfg.mp_bytes
+    got = s.read(s.ms_addr(g) + off, s.cfg.mp_bytes)
+    assert got == data[off : off + s.cfg.mp_bytes]
+    rec = s.reqs.lookup(g).record
+    assert rec.state == MS_PARTIAL
+    assert rec.present_count == 1
+    assert s.virt.table.is_split(g)
+    # remaining MPs still load fine
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert rec.state == MS_RESIDENT
+    assert not s.virt.table.is_split(g)
+
+
+def test_crc_detects_backend_corruption():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    fill(s, g, 3)
+    s.engine.swap_out_ms(g)
+    # corrupt one compressed entry behind the engine's back
+    key = next(iter(s.backend._compressed))
+    blob = bytearray(s.backend._compressed[key])
+    blob[0] ^= 0xFF
+    s.backend._compressed[key] = bytes(blob)
+    with pytest.raises(CorruptionError):
+        s.read(s.ms_addr(g), s.cfg.ms_bytes)
+    assert s.metrics.crc_failures >= 1
+
+
+def test_pinned_ms_refuses_swap():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    s.virt.table.set_pinned(g, True)
+    with pytest.raises(PinnedError):
+        s.engine.swap_out_ms(g)
+
+
+# ------------------------------------------------------------- watermarks
+def test_overcommit_beyond_physical():
+    """The headline claim: >50% more virtual memory than physical (O3)."""
+    s = fresh()
+    cfg = s.cfg
+    n = cfg.n_virt_ms - cfg.mpool_reserve_ms
+    payload = {}
+    for i in range(n):
+        g = s.guest_alloc_ms()
+        payload[g] = fill(s, g, 100 + i)
+    assert len(payload) > (cfg.n_phys_ms - cfg.mpool_reserve_ms) * 1.4
+    for g, data in payload.items():
+        assert s.read(s.ms_addr(g), cfg.ms_bytes) == data
+    assert s.metrics.ms_swapped_out > 0
+
+
+def test_reclaim_round_respects_watermarks():
+    s = fresh()
+    managed = s.cfg.n_phys_ms - s.cfg.mpool_reserve_ms
+    gfns = []
+    while s.phys.free_count > s.watermark.low_ms - 1 and \
+            len(gfns) < managed + 4:
+        g = s.guest_alloc_ms()
+        fill(s, g, len(gfns))
+        gfns.append(g)
+    # age everything to cold
+    for _ in range(6):
+        s.lru.scan_shard(0, 1)
+    while s.engine.reclaim_round() > 0:
+        pass
+    assert s.phys.free_count >= s.watermark.high_ms
+
+
+# ------------------------------------------------------------ concurrency
+def test_concurrent_faults_same_ms_exactly_once():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    data = fill(s, g, 7)
+    s.engine.swap_out_ms(g)
+    errs = []
+
+    def reader(mp):
+        try:
+            off = mp * s.cfg.mp_bytes
+            got = s.read(s.ms_addr(g) + off, s.cfg.mp_bytes)
+            assert got == data[off : off + s.cfg.mp_bytes]
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=reader, args=(mp % s.cfg.mps_per_ms,))
+               for mp in range(4 * s.cfg.mps_per_ms)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    # exactly-once: each MP swapped in a single time
+    assert s.metrics.mp_swapped_in == s.cfg.mps_per_ms
+    assert s.reqs.lookup(g).record.state == MS_RESIDENT
+
+
+def test_reader_cancels_writer():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    data = fill(s, g, 9)
+
+    # slow the backend store so the writer holds the lock measurably
+    orig_store = s.backend.store
+    import time
+
+    def slow_store(gfn, mp, d):
+        time.sleep(0.002)
+        return orig_store(gfn, mp, d)
+
+    s.backend.store = slow_store
+    done = threading.Event()
+
+    def writer():
+        s.engine.swap_out_ms(g)
+        done.set()
+
+    w = threading.Thread(target=writer)
+    w.start()
+    time.sleep(0.004)                   # let it swap a couple of MPs
+    got = s.read(s.ms_addr(g), s.cfg.mp_bytes)   # reader bumps the writer
+    assert got == data[: s.cfg.mp_bytes]
+    w.join(5)
+    assert done.is_set()
+    assert s.metrics.writer_cancels >= 1 or s.metrics.mp_swapped_out == s.cfg.mps_per_ms
+
+
+def test_parallel_swaps_different_ms():
+    s = fresh()
+    gfns = []
+    datas = {}
+    for i in range(6):
+        g = s.guest_alloc_ms()
+        datas[g] = fill(s, g, 20 + i)
+        gfns.append(g)
+    for g in gfns:
+        s.engine.swap_out_ms(g)
+    errs = []
+
+    def worker(g):
+        try:
+            assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == datas[g]
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(g,)) for g in gfns]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs

@@ -1,0 +1,62 @@
+"""Hybrid virtualization layer (paper §4.1): translation + contracts."""
+import numpy as np
+import pytest
+
+from repro.core.config import small_test_config
+from repro.core.errors import InvalidStateError
+from repro.core.system import TaijiSystem
+from repro.core.virt import EPTFault
+
+
+def test_gpa_hpa_identity_for_mpool():
+    s = TaijiSystem(small_test_config())
+    cfg = s.cfg
+    for gfn in range(cfg.mpool_reserve_ms):
+        assert int(s.virt.table.pfn[gfn]) == gfn
+        assert s.virt.table.is_pinned(gfn)
+        s.virt.root_access(gfn * cfg.ms_bytes)   # must not raise
+
+
+def test_root_access_rejects_non_identity():
+    s = TaijiSystem(small_test_config())
+    g = s.guest_alloc_ms()
+    with pytest.raises(InvalidStateError):
+        s.virt.root_access(g * s.cfg.ms_bytes)
+
+
+def test_guest_rw_roundtrip_and_access_bit():
+    s = TaijiSystem(small_test_config())
+    g = s.guest_alloc_ms()
+    addr = s.ms_addr(g, mp=2, off=10)
+    s.write(addr, b"taiji")
+    assert s.read(addr, 5) == b"taiji"
+    assert s.virt.table.test_and_clear_accessed(g)
+    assert not s.virt.table.test_and_clear_accessed(g)
+
+
+def test_access_crossing_mp_boundary():
+    s = TaijiSystem(small_test_config())
+    g = s.guest_alloc_ms()
+    mp_bytes = s.cfg.mp_bytes
+    addr = s.ms_addr(g, mp=0, off=mp_bytes - 3)
+    s.write(addr, b"abcdef")           # spans MP0 -> MP1
+    assert s.read(addr, 6) == b"abcdef"
+
+
+def test_fault_raised_without_handler():
+    s = TaijiSystem(small_test_config())
+    g = s.guest_alloc_ms()
+    s.write(s.ms_addr(g), b"x" * 16)
+    s.engine.swap_out_ms(g)
+    s.virt.fault_handler = None        # detach engine
+    with pytest.raises(EPTFault):
+        s.virt.guest_read(s.ms_addr(g), 1)
+
+
+def test_fault_handler_resolves_transparently():
+    s = TaijiSystem(small_test_config())
+    g = s.guest_alloc_ms()
+    s.write(s.ms_addr(g), bytes(range(64)))
+    assert s.engine.swap_out_ms(g) == s.cfg.mps_per_ms
+    assert s.read(s.ms_addr(g), 64) == bytes(range(64))
+    assert s.metrics.faults > 0
