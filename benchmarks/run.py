@@ -1,20 +1,38 @@
 """Benchmark harness entry: one module per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows per the harness contract, plus the
-full roofline table. ``python -m benchmarks.run [--quick]``.
+full roofline table, and records every row in a ``BENCH_*.json`` artifact
+(``BENCH_smoke.json`` for the CI perf canary, ``BENCH_full.json``
+otherwise). ``python -m benchmarks.run [--quick] [--smoke]``.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
 import traceback
+
+
+def _module_rows(mod, smoke: bool):
+    """Call ``mod.rows()``, passing ``smoke=`` only where supported."""
+    if smoke and "smoke" in inspect.signature(mod.rows).parameters:
+        return mod.rows(smoke=True)
+    return mod.rows()
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the slower latency benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, seconds not minutes (CI perf canary); "
+                         "writes BENCH_smoke.json")
+    ap.add_argument("--out", default=None,
+                    help="JSON artifact path (default BENCH_smoke.json / "
+                         "BENCH_full.json)")
     args = ap.parse_args()
 
     from . import (backend_ratio, code_size, fault_latency, lru_accuracy,
@@ -29,26 +47,41 @@ def main() -> None:
         ("code_size (Table 2)", code_size),
     ]
     if not args.quick:
+        # smoke mode keeps fault_latency (it carries the batched-vs-scalar
+        # swap throughput rows the CI canary gates on) with a tiny config
         modules.insert(0, ("fault_latency (Fig 14f/15d)", fault_latency))
 
     print("name,value,derived")
     failures = 0
+    recorded = {}
     for title, mod in modules:
         t0 = time.time()
         try:
-            for name, value, derived in mod.rows():
+            for name, value, derived in _module_rows(mod, args.smoke):
                 print(f"{name},{value:.6g},{derived}")
+                recorded[name] = {"value": float(value), "derived": str(derived)}
         except Exception:
             failures += 1
             traceback.print_exc()
         print(f"# {title} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
-    print("\n# === roofline table (from dry-run artifacts) ===")
-    try:
-        roofline.run(verbose=True)
-    except Exception:
-        failures += 1
-        traceback.print_exc()
+    if not args.smoke:
+        print("\n# === roofline table (from dry-run artifacts) ===")
+        try:
+            roofline.run(verbose=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+
+    out_path = args.out or ("BENCH_smoke.json" if args.smoke else "BENCH_full.json")
+    payload = {
+        "mode": "smoke" if args.smoke else ("quick" if args.quick else "full"),
+        "failures": failures,
+        "rows": recorded,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {os.path.abspath(out_path)}", file=sys.stderr)
 
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")

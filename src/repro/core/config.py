@@ -63,6 +63,29 @@ class SchedulerConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SwapConfig:
+    """Batched swap data-path knobs (paper §4.2.2 "parallel swapping").
+
+    The engine moves MPs in batches of ``batch_mps`` index-vector chunks
+    derived from the ``bm_in``/``bm_out`` bitmaps; cancellation (Fig 8
+    (2.2)) is honoured between chunks, so ``batch_mps`` bounds how long a
+    racing fault waits on an active writer. ``batch_mps <= 0`` disables
+    batching entirely (scalar per-MP path, kept for A/B benchmarks).
+    """
+
+    batch_enabled: bool = True
+    batch_mps: int = 64              # MPs per backend bulk call / cancel point
+    # route the batch zero-page scan through the Pallas kernel
+    # (kernels/zero_detect.py) instead of numpy — the device entry point
+    # for a TPU backend; interpret-mode on CPU, so numpy stays the default.
+    # The per-MP CRC stored in MS records is zlib.crc32 on both paths
+    # (records stay byte-compatible, hot-upgrade ABI §4.4); the Fletcher
+    # kernel (kernels/crc32c.py, ops.batch_checksum) is the device-side
+    # checksum for flows that never leave the accelerator.
+    use_pallas_kernels: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class BackendConfig:
     """Swap backend stores (paper §4.2.2 backend + §7.2)."""
 
@@ -74,6 +97,9 @@ class BackendConfig:
     # optional fallback tiers; "remote memory and disks act as fallback"
     disk_fallback_path: str | None = None
     crc_enabled: bool = True         # §7.1 CRC to guarantee correctness
+    # per-kind/per-shard lock split for the in-memory tiers (Palladium-style
+    # sharding of per-tenant state); keys hash by (gfn, mp) across shards
+    lock_shards: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +119,7 @@ class TaijiConfig:
     watermark: WatermarkConfig = dataclasses.field(default_factory=WatermarkConfig)
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     backend: BackendConfig = dataclasses.field(default_factory=BackendConfig)
+    swap: SwapConfig = dataclasses.field(default_factory=SwapConfig)
 
     abi_version: int = ABI_VERSION
     # reserved fields for forward-compatible hot upgrades (paper §4.4)
@@ -125,6 +152,8 @@ class TaijiConfig:
         total = sc.share_front + sc.share_fcpu + sc.share_back + sc.share_idle
         if total > 1.0 + 1e-9:
             raise ValueError("scheduler shares must sum to <= 1.0")
+        if self.backend.lock_shards < 1:
+            raise ValueError("backend.lock_shards must be >= 1")
 
 
 def small_test_config(**overrides) -> TaijiConfig:

@@ -136,10 +136,15 @@ class EngineModuleV2(EngineModule):
         engine = super().make_engine()
         base_reclaim = engine.reclaim_round
 
-        def reclaim_round_v2() -> int:
-            n = base_reclaim()
-            if n > 0:                       # keep pressure while productive
-                n += base_reclaim()
+        def reclaim_round_v2(budget_s=None) -> int:
+            t0 = time.monotonic()
+            n = base_reclaim(budget_s)
+            if n > 0:                       # keep pressure while productive,
+                # but within the same hv_sched quantum, not a second one
+                rem = (None if budget_s is None
+                       else budget_s - (time.monotonic() - t0))
+                if rem is None or rem > 0:
+                    n += base_reclaim(rem)
             return n
 
         engine.reclaim_round = reclaim_round_v2  # type: ignore[assignment]

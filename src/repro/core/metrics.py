@@ -122,6 +122,12 @@ class Metrics:
         self.ms_swapped_in = 0
         self.mp_swapped_out = 0
         self.mp_swapped_in = 0
+        # batched data path (one batch == one store_batch/load_batch chunk)
+        self.swap_out_batches = 0
+        self.swap_in_batches = 0
+        self.mp_swapped_out_batched = 0  # numerator for mean batch size
+        self.backend_batch_stores = 0
+        self.backend_batch_loads = 0
         self.writer_cancels = 0          # rw-lock cancel events (paper Fig 8 (2.2))
         self.crc_checks = 0
         self.crc_failures = 0
@@ -152,6 +158,11 @@ class Metrics:
             "ms_swapped_in": self.ms_swapped_in,
             "mp_swapped_out": self.mp_swapped_out,
             "mp_swapped_in": self.mp_swapped_in,
+            "swap_out_batches": self.swap_out_batches,
+            "swap_in_batches": self.swap_in_batches,
+            "mean_swap_out_batch_mps": (
+                self.mp_swapped_out_batched / self.swap_out_batches
+                if self.swap_out_batches else 0.0),
             "writer_cancels": self.writer_cancels,
             "crc_failures": self.crc_failures,
             "zero_mps": self.backend_zero_mps,

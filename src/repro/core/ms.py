@@ -44,6 +44,48 @@ K_DISK = 4
 _H_ABI, _H_GFN, _H_PFN, _H_PRESENT, _H_STATE = 0, 1, 2, 3, 4
 _HEADER_WORDS = 8
 
+_BIT_COLUMN = np.arange(64, dtype=np.uint64)
+_ONE = np.uint64(1)
+
+
+# ------------------------------------------------------- bitmap helpers --
+# Vectorized operations over uint64 word arrays (the persistent bm_in /
+# bm_out arenas). The batched swap path derives MP index vectors from
+# these instead of testing one bit per Python call.
+
+def popcount_words(bm: np.ndarray) -> int:
+    """Total set bits across all words."""
+    return int(np.count_nonzero((bm[:, None] >> _BIT_COLUMN) & _ONE))
+
+
+def bitmap_indices(bm: np.ndarray, n: int) -> np.ndarray:
+    """Indices (int64, ascending) of set bits in ``[0, n)``.
+
+    Expands word-by-word via shifts rather than byte views so the result
+    is endianness-independent (the arena is shared across hot upgrades).
+    """
+    bits = ((bm[:, None] >> _BIT_COLUMN) & _ONE).reshape(-1)
+    return np.flatnonzero(bits[:n])
+
+
+def iter_set(bm: np.ndarray, n: int):
+    """Yield set-bit indices in ``[0, n)`` (scalar convenience walker)."""
+    for i in bitmap_indices(bm, n):
+        yield int(i)
+
+
+def set_bits(bm: np.ndarray, idxs: np.ndarray, value: bool) -> None:
+    """Set/clear a vector of bit indices in one scatter."""
+    if len(idxs) == 0:
+        return
+    idxs = np.asarray(idxs, dtype=np.int64)
+    words = idxs >> 6
+    masks = _ONE << (idxs & 63).astype(np.uint64)
+    if value:
+        np.bitwise_or.at(bm, words, masks)
+    else:
+        np.bitwise_and.at(bm, words, ~masks)
+
 
 def record_nbytes(cfg: TaijiConfig) -> int:
     nw = (cfg.mps_per_ms + 63) // 64
@@ -138,7 +180,24 @@ class MSRecord:
         self._set_bit(self.bm_in, mp, v)
 
     def swapped_out_count(self) -> int:
-        return int(sum(int(w).bit_count() for w in self.bm_out))
+        return popcount_words(self.bm_out)
+
+    # ------------------------------------------------- batched bitmap views
+    def resident_indices(self) -> np.ndarray:
+        """MPs neither swapped out nor mid-IO: the swap-out batch input."""
+        return bitmap_indices(~(self.bm_out | self.bm_in),
+                              self.cfg.mps_per_ms)
+
+    def swapped_out_indices(self) -> np.ndarray:
+        """MPs swapped out and not mid-IO: the swap-in batch input."""
+        inert = self.bm_out & ~self.bm_in
+        return bitmap_indices(inert, self.cfg.mps_per_ms)
+
+    def set_swapped_out_batch(self, idxs: np.ndarray, v: bool) -> None:
+        set_bits(self.bm_out, idxs, v)
+
+    def set_swapping_in_batch(self, idxs: np.ndarray, v: bool) -> None:
+        set_bits(self.bm_in, idxs, v)
 
     # -------------------------------------------------------- state machine
     def on_first_swap_out(self) -> None:

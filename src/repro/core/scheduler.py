@@ -145,6 +145,11 @@ class HvScheduler:
             budgets[BACK] = 0.0
         carry = 0.0
         for cls in (FRONT, FCPU, BACK, IDLE):
+            if cls == BACK and not self._back_enabled[shard]:
+                # disabled shard: BACK must not inherit carried slices
+                # either (a penalized FRONT task's unused slice would
+                # otherwise leak here); pass the carry straight to IDLE
+                continue
             # unused slices flow downward, but never past the cycle end:
             # a class can only spend what remains of this cycle
             budget = min(budgets[cls] + carry,

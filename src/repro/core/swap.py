@@ -156,11 +156,15 @@ class SwapEngine:
                 req.mp_cond.notify_all()
 
     # ========================================================== Swap_out ==
-    def swap_out_ms(self, gfn: int, *, blocking_lock: bool = True) -> int:
+    def swap_out_ms(self, gfn: int, *, blocking_lock: bool = True,
+                    batched: Optional[bool] = None) -> int:
         """Active swap-out of all resident MPs of one MS.
 
         Returns MPs swapped out. Aborts promptly when cancelled by a
         reader (returns partial progress; the MS remains consistent).
+        ``batched=None`` follows ``cfg.swap.batch_enabled``; the scalar
+        per-MP path is kept for A/B benchmarking and as the semantic
+        reference the equivalence tests compare against.
         """
         if self.virt.table.is_pinned(gfn):
             raise PinnedError(f"gfn {gfn} is pinned (mpool/DMA)")
@@ -172,81 +176,227 @@ class SwapEngine:
         if grant is None:
             return 0
         t0 = _perf_ns()
-        done = 0
+        if batched is None:
+            batched = self.cfg.swap.batch_enabled
         try:
-            rec = req.record
-            for mp in range(self.cfg.mps_per_ms):
-                if grant.cancelled:                   # reader bumped us (2.2)
-                    self.metrics.writer_cancels += 1
-                    break
-                with req.mp_cond:
-                    if rec.is_swapped_out(mp) or rec.is_swapping_in(mp):
-                        continue
-                    if rec.state == MS_RESIDENT:      # first MP: split (4.1)
-                        self.virt.table.split(gfn)
-                        rec.on_first_swap_out()
-                    # unmap before copy: bm_out makes the MP non-present,
-                    # bm_in latches the in-flight IO so faults wait
-                    rec.set_swapped_out(mp, True)
-                    rec.set_swapping_in(mp, True)
-                    pfn_now = rec.pfn
-
-                data = self.virt.phys.mp_view(pfn_now, mp).copy()
-                kind, crc = self.backend.store(gfn, mp, data)     # (5)
-
-                with req.mp_cond:
-                    rec.kinds[mp] = kind
-                    rec.crc[mp] = crc
-                    rec.set_swapping_in(mp, False)
-                    rec.present_count -= 1
-                    done += 1
-                    self.metrics.mp_swapped_out += 1
-                    if rec.present_count == 0:        # last MP: reclaim
-                        rec.on_last_swap_out()
-                        self.virt.table.unmap(gfn)
-                        self.virt.phys.free_slot(pfn_now)
-                        self.lru.note_swapped_out(gfn)
-                        self.metrics.ms_swapped_out += 1
-                    req.mp_cond.notify_all()
+            if batched:
+                done = self._swap_out_batched(req, gfn, grant)
+            else:
+                done = self._swap_out_scalar(req, gfn, grant)
         finally:
             req.rwlock.release_write(grant)
         self.metrics.swap_out_latency.record(_perf_ns() - t0)
         return done
 
+    def _swap_out_scalar(self, req: Req, gfn: int, grant) -> int:
+        rec = req.record
+        done = 0
+        for mp in range(self.cfg.mps_per_ms):
+            if grant.cancelled:                   # reader bumped us (2.2)
+                self.metrics.writer_cancels += 1
+                break
+            with req.mp_cond:
+                if rec.is_swapped_out(mp) or rec.is_swapping_in(mp):
+                    continue
+                if rec.state == MS_RESIDENT:      # first MP: split (4.1)
+                    self.virt.table.split(gfn)
+                    rec.on_first_swap_out()
+                # unmap before copy: bm_out makes the MP non-present,
+                # bm_in latches the in-flight IO so faults wait
+                rec.set_swapped_out(mp, True)
+                rec.set_swapping_in(mp, True)
+                pfn_now = rec.pfn
+
+            data = self.virt.phys.mp_view(pfn_now, mp).copy()
+            kind, crc = self.backend.store(gfn, mp, data)     # (5)
+
+            with req.mp_cond:
+                rec.kinds[mp] = kind
+                rec.crc[mp] = crc
+                rec.set_swapping_in(mp, False)
+                rec.present_count -= 1
+                done += 1
+                self.metrics.mp_swapped_out += 1
+                if rec.present_count == 0:        # last MP: reclaim
+                    rec.on_last_swap_out()
+                    self.virt.table.unmap(gfn)
+                    self.virt.phys.free_slot(pfn_now)
+                    self.lru.note_swapped_out(gfn)
+                    self.metrics.ms_swapped_out += 1
+                req.mp_cond.notify_all()
+        return done
+
+    def _swap_out_batched(self, req: Req, gfn: int, grant) -> int:
+        """Swap out in MP index-vector chunks (tentpole data path).
+
+        Each chunk runs the scalar path's exact state transitions, but on
+        a whole index vector at once: one bitmap scatter marks the chunk
+        non-present + IO-latched, one gather copies it, one
+        ``store_batch`` call zero-detects/CRCs/compresses it, and one
+        scatter publishes the kinds/CRCs. Cancellation (Fig 8 (2.2)) is
+        honoured between chunks, so ``cfg.swap.batch_mps`` bounds a
+        racing reader's wait.
+        """
+        rec = req.record
+        cfg = self.cfg
+        chunk = max(1, cfg.swap.batch_mps)
+        done = 0
+        # the write lock excludes faults and other writers, so the resident
+        # set is fixed for the whole task: derive the MP index vector once
+        # and walk it in cancellation-checked chunks
+        with req.mp_cond:
+            todo = rec.resident_indices()
+        for lo in range(0, len(todo), chunk):
+            if grant.cancelled:
+                self.metrics.writer_cancels += 1
+                break
+            idxs = todo[lo:lo + chunk]
+            with req.mp_cond:
+                if rec.state == MS_RESIDENT:      # first MP: split (4.1)
+                    self.virt.table.split(gfn)
+                    rec.on_first_swap_out()
+                # unmap before copy, latch in-flight IO (scalar semantics)
+                rec.set_swapped_out_batch(idxs, True)
+                rec.set_swapping_in_batch(idxs, True)
+                pfn_now = rec.pfn
+
+            ms = self.virt.phys.ms_view(pfn_now).reshape(
+                cfg.mps_per_ms, cfg.mp_bytes)
+            data = ms[idxs]                       # fancy index: a copy (5)
+            kinds, crcs = self.backend.store_batch(gfn, idxs, data)
+
+            with req.mp_cond:
+                rec.kinds[idxs] = kinds
+                rec.crc[idxs] = crcs
+                rec.set_swapping_in_batch(idxs, False)
+                rec.present_count -= len(idxs)
+                done += len(idxs)
+                self.metrics.mp_swapped_out += len(idxs)
+                self.metrics.mp_swapped_out_batched += len(idxs)
+                self.metrics.swap_out_batches += 1
+                if rec.present_count == 0:        # last MP: reclaim
+                    rec.on_last_swap_out()
+                    self.virt.table.unmap(gfn)
+                    self.virt.phys.free_slot(pfn_now)
+                    self.lru.note_swapped_out(gfn)
+                    self.metrics.ms_swapped_out += 1
+                req.mp_cond.notify_all()
+        return done
+
     # =========================================================== Swap_in ==
-    def swap_in_ms(self, gfn: int) -> int:
+    def swap_in_ms(self, gfn: int, *, batched: Optional[bool] = None) -> int:
         """Active prefetch swap-in of all swapped MPs of one MS."""
         req = self.reqs.lookup(gfn)
         if req is None:
             return 0
         grant = req.rwlock.acquire_write()
         t0 = _perf_ns()
+        if batched is None:
+            batched = self.cfg.swap.batch_enabled
         done = 0
         try:
-            rec = req.record
-            for mp in range(self.cfg.mps_per_ms):
-                if grant.cancelled:
-                    self.metrics.writer_cancels += 1
-                    break
-                with req.mp_cond:
-                    if not rec.is_swapped_out(mp) or rec.is_swapping_in(mp):
-                        continue
-                # delegate to the fault path's exactly-once machinery
-                self._fault_in_locked(req, gfn, mp)
-                done += 1
+            if batched:
+                done = self._swap_in_batched(req, gfn, grant)
+            else:
+                done = self._swap_in_scalar(req, gfn, grant)
         finally:
             req.rwlock.release_write(grant)
         self.metrics.swap_in_latency.record(_perf_ns() - t0)
         return done
 
+    def _swap_in_scalar(self, req: Req, gfn: int, grant) -> int:
+        rec = req.record
+        done = 0
+        for mp in range(self.cfg.mps_per_ms):
+            if grant.cancelled:
+                self.metrics.writer_cancels += 1
+                break
+            with req.mp_cond:
+                if not rec.is_swapped_out(mp) or rec.is_swapping_in(mp):
+                    continue
+            # delegate to the fault path's exactly-once machinery
+            self._fault_in_locked(req, gfn, mp)
+            done += 1
+        return done
+
+    def _swap_in_batched(self, req: Req, gfn: int, grant) -> int:
+        """Prefetch swap-in in MP index-vector chunks.
+
+        Mirrors ``_fault_in_locked`` chunk-wise: exactly-once first-in
+        allocation, the bm_in IO latch held across the bulk backend load,
+        and the merge on the last MP. Zero rows are memset vectorized
+        inside ``load_batch`` (no per-MP backend round trip).
+        """
+        rec = req.record
+        cfg = self.cfg
+        chunk = max(1, cfg.swap.batch_mps)
+        done = 0
+        # swapped-out set is fixed while we hold the write lock (faults
+        # block; the IO latch below covers the store side): scan once
+        with req.mp_cond:
+            todo = rec.swapped_out_indices()
+        for lo in range(0, len(todo), chunk):
+            if grant.cancelled:
+                self.metrics.writer_cancels += 1
+                break
+            idxs = todo[lo:lo + chunk]
+            with req.mp_cond:
+                if rec.state == MS_SWAPPED:
+                    pfn = self._alloc_slot_critical()
+                    rec.on_first_swap_in(pfn)     # exactly-once alloc
+                    self.virt.table.map_split(gfn, pfn)
+                    self.lru.note_swapped_in(gfn)
+                pfn = rec.pfn
+                kinds = rec.kinds[idxs].copy()
+                crcs = rec.crc[idxs].copy()
+                rec.set_swapping_in_batch(idxs, True)   # IO latch (3.3)
+
+            ms = self.virt.phys.ms_view(pfn).reshape(
+                cfg.mps_per_ms, cfg.mp_bytes)
+            ok = False
+            try:
+                if len(idxs) == cfg.mps_per_ms:
+                    # whole-MS chunk: decode straight into the MS frame
+                    self.backend.load_batch(gfn, idxs, kinds, crcs, ms)
+                else:
+                    out = _np.empty((len(idxs), cfg.mp_bytes), dtype=_np.uint8)
+                    self.backend.load_batch(gfn, idxs, kinds, crcs, out)
+                    ms[idxs] = out
+                ok = True
+            finally:
+                with req.mp_cond:
+                    rec.set_swapping_in_batch(idxs, False)
+                    if ok:
+                        rec.set_swapped_out_batch(idxs, False)
+                        rec.kinds[idxs] = K_NONE
+                        rec.present_count += len(idxs)
+                        done += len(idxs)
+                        self.metrics.mp_swapped_in += len(idxs)
+                        self.metrics.swap_in_batches += 1
+                        if rec.present_count == cfg.mps_per_ms:
+                            rec.on_last_swap_in()
+                            self.virt.table.merge(gfn, rec.pfn)   # (7)
+                            self.metrics.ms_swapped_in += 1
+                    req.mp_cond.notify_all()
+        return done
+
     # ===================================================== reclaim rounds ==
-    def reclaim_round(self) -> int:
-        """One background reclaim round (BACK priority task body)."""
+    def reclaim_round(self, budget_s: Optional[float] = None) -> int:
+        """One background reclaim round (BACK priority task body).
+
+        The round issues whole-MS batches: the watermark policy sizes the
+        candidate pick from the distance back to ``high`` (never more MSs
+        than the deficit), and each MS moves through the batched swap-out
+        path. ``budget_s`` is the hv_sched quantum handed to the BACK
+        task; the round stops starting new MS batches once it is spent,
+        so batch sizing composes with the scheduler's time slicing.
+        """
         free = self.virt.free_ms
         self.metrics.free_ms_timeline.record(free)
         if not self.watermark.should_start_reclaim(free):
             return 0
-        batch = self.cfg.watermark.reclaim_batch
+        deadline = (time.monotonic() + budget_s) if budget_s else None
+        batch = self.watermark.reclaim_batch_ms(free)
         candidates = self.lru.pick_cold(batch)
         if not candidates:
             # §4.2.2: "halting reclaim between low and high if no cold
@@ -259,6 +409,8 @@ class SwapEngine:
         reclaimed = 0
         for gfn in candidates:
             if self.watermark.should_stop_reclaim(self.virt.free_ms):
+                break
+            if deadline is not None and time.monotonic() >= deadline:
                 break
             try:
                 reclaimed += self.swap_out_ms(gfn, blocking_lock=False)
@@ -274,9 +426,11 @@ class SwapEngine:
         if slot is not None and not self.watermark.is_critical(self.virt.free_ms):
             return slot
         if slot is not None:
-            # critical but not exhausted: kick a synchronous reclaim too
+            # critical but not exhausted: kick a synchronous reclaim too,
+            # sized by the watermark deficit (whole-MS batches)
             self.metrics.proactive_reclaims += 1
-            for gfn in self.lru.pick_cold(1, include_cold_int=True):
+            n = self.watermark.critical_batch_ms(self.virt.free_ms)
+            for gfn in self.lru.pick_cold(n, include_cold_int=True):
                 try:
                     self.swap_out_ms(gfn, blocking_lock=False)
                 except PinnedError:

@@ -116,8 +116,10 @@ class TaijiSystem:
         for w in range(nw):
             self.scheduler.add_task(w, f"lru/{w}", sched.BACK, make_scan(w))
 
-        def reclaim(_quantum: float) -> bool:
-            self.engine.reclaim_round()
+        def reclaim(quantum: float) -> bool:
+            # the hv_sched quantum bounds the round: reclaim stops starting
+            # new whole-MS batches once its BACK slice is spent
+            self.engine.reclaim_round(budget_s=quantum)
             return True
 
         self.scheduler.add_task(0, "reclaim", sched.BACK, reclaim)

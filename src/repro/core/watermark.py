@@ -52,6 +52,23 @@ class WatermarkPolicy:
         """How many MSs to reclaim to get back above ``high``."""
         return max(0, self.high_ms - free_ms)
 
+    # ----------------------------------------------------------- batch sizing
+    def reclaim_batch_ms(self, free_ms: int) -> int:
+        """Whole-MS batch size for one background reclaim round.
+
+        Bounded by the configured round size and by the deficit back to
+        ``high`` -- the round never picks more MSs than it needs, so the
+        batched swap path doesn't overshoot the watermark band.
+        """
+        return max(1, min(self.cfg.watermark.reclaim_batch,
+                          self.reclaim_target(free_ms)))
+
+    def critical_batch_ms(self, free_ms: int) -> int:
+        """Synchronous fault-path reclaim batch: sized by the deficit below
+        ``min`` so a single fault never drags out a long reclaim."""
+        deficit = self.min_ms - free_ms + 1
+        return max(1, min(self.cfg.watermark.reclaim_batch, deficit))
+
     @property
     def reclaiming(self) -> bool:
         with self._lock:

@@ -8,6 +8,8 @@ shapes/dtypes asserting allclose between the two.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from .compress import block_dequantize, block_quantize
 from .crc32c import fletcher_checksum
@@ -24,8 +26,42 @@ def default_interpret() -> bool:
     return not on_tpu()
 
 
+def _pick_tile(elems: int, cap: int = 4096) -> int:
+    """Largest divisor of ``elems`` not exceeding ``cap`` (VMEM tile)."""
+    t = min(cap, elems)
+    while elems % t:
+        t -= 1
+    return t
+
+
+def batch_zero_detect(blocks: np.ndarray) -> np.ndarray:
+    """(n, elems) uint8 host batch -> (n,) bool via the Pallas kernel.
+
+    Device entry point for the backend's batched zero-page scan; on CPU
+    containers the kernel runs in interpret mode, so the numpy fallback in
+    BackendStore stays the default (cfg.swap.use_pallas_kernels).
+    """
+    out = zero_detect(jnp.asarray(blocks), tile_elems=_pick_tile(blocks.shape[1]),
+                      interpret=default_interpret())
+    return np.asarray(out)
+
+
+def batch_checksum(blocks: np.ndarray) -> np.ndarray:
+    """(n, elems) uint8 host batch -> (n,) uint32 Fletcher checksums.
+
+    The device-path integrity tag for batched swaps (DESIGN.md §2); the
+    host CRC stored in MS records remains zlib.crc32 so records are
+    byte-compatible between scalar and batched paths.
+    """
+    out = fletcher_checksum(jnp.asarray(blocks),
+                            tile_elems=_pick_tile(blocks.shape[1]),
+                            interpret=default_interpret())
+    return np.asarray(out)
+
+
 __all__ = [
     "zero_detect", "block_quantize", "block_dequantize",
     "fletcher_checksum", "gather_blocks", "scatter_blocks",
     "paged_decode_attention", "on_tpu", "default_interpret",
+    "batch_zero_detect", "batch_checksum",
 ]

@@ -1,5 +1,8 @@
 """Elastic KV cache + elastic expert cache over the Taiji core."""
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow      # excluded from the default CI lane
 
 from repro.core.config import LRUConfig
 from repro.core.elastic_kv import ElasticKVCache, KVGeometry, make_kv_taiji_config

@@ -9,6 +9,8 @@ from repro.core import (EngineModule, EngineModuleV2, EntryOps,
                         install_module, small_test_config)
 from repro.core.errors import ABIMismatchError
 
+pytestmark = pytest.mark.slow      # excluded from the default CI lane
+
 
 class Service(threading.Thread):
     """A running workload: continuous read/write through the accessor."""

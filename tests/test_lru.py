@@ -1,4 +1,7 @@
 """Multi-level LRU (paper §4.2.1, Fig 7): transitions, smoothing, order."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,4 +1,7 @@
 """Property tests for the req red-black tree (paper Fig 8 (1.1-1.3))."""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -63,16 +63,34 @@ def test_partial_fault_leaves_consistent_split_state():
     assert not s.virt.table.is_split(g)
 
 
+def corrupt_one_stored_mp(backend):
+    """Flip bits in one stored MP behind the engine's back, whichever
+    representation (standalone blob or batch extent) holds it."""
+    for key, entry in backend._compressed.items():
+        if isinstance(entry, bytes):
+            blob = bytearray(entry)
+            blob[0] ^= 0xFF
+            backend._compressed[key] = bytes(blob)
+            return
+    # batched path: corrupt the decompressed payload of one extent (zlib
+    # would reject a corrupted stream outright; corrupting the raw cache
+    # exercises the CRC check itself)
+    key = next(iter(backend._extents))
+    blob, is_raw, remaining, stored_len = backend._extents[key]
+    if not is_raw:
+        import zlib
+        blob = zlib.decompress(blob)
+    raw = bytearray(blob)
+    raw[0] ^= 0xFF
+    backend._extents[key] = [bytes(raw), True, remaining, stored_len]
+
+
 def test_crc_detects_backend_corruption():
     s = fresh()
     g = s.guest_alloc_ms()
     fill(s, g, 3)
     s.engine.swap_out_ms(g)
-    # corrupt one compressed entry behind the engine's back
-    key = next(iter(s.backend._compressed))
-    blob = bytearray(s.backend._compressed[key])
-    blob[0] ^= 0xFF
-    s.backend._compressed[key] = bytes(blob)
+    corrupt_one_stored_mp(s.backend)
     with pytest.raises(CorruptionError):
         s.read(s.ms_addr(g), s.cfg.ms_bytes)
     assert s.metrics.crc_failures >= 1
