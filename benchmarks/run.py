@@ -35,8 +35,8 @@ def main() -> None:
                          "BENCH_full.json)")
     args = ap.parse_args()
 
-    from . import (backend_ratio, code_size, fault_latency, lru_accuracy,
-                   metadata, overcommit, overhead, roofline)
+    from . import (backend_ratio, code_size, fault_latency, fleet,
+                   lru_accuracy, metadata, overcommit, overhead, roofline)
 
     modules = [
         ("overhead (Fig 11/12)", overhead),
@@ -45,6 +45,7 @@ def main() -> None:
         ("lru_accuracy (Fig 15b)", lru_accuracy),
         ("backend_ratio (Fig 15c)", backend_ratio),
         ("code_size (Table 2)", code_size),
+        ("fleet (ISSUE 2: multi-node replay)", fleet),
     ]
     if not args.quick:
         # smoke mode keeps fault_latency (it carries the batched-vs-scalar

@@ -78,6 +78,29 @@ class LatencyHistogram:
     def mean_ns(self) -> float:
         return self.total_ns / self.count if self.count else 0.0
 
+    def merge(self, other: "LatencyHistogram") -> None:
+        """Fold ``other`` into this histogram (fleet-wide aggregation).
+
+        Exact reservoirs are kept only while every sample fits; once any
+        source overflows, the merged reservoir would over-weight whichever
+        node merged first (``percentile`` prefers samples whenever
+        present), so it is dropped and percentiles fall back to the
+        unbiased bucket math.
+        """
+        both_complete = (len(self.samples) == self.count
+                         and len(other.samples) == other.count
+                         and self.count + other.count <= self._RESERVOIR)
+        for i, c in enumerate(other.buckets):
+            self.buckets[i] += c
+        self.count += other.count
+        self.total_ns += other.total_ns
+        if other.max_ns > self.max_ns:
+            self.max_ns = other.max_ns
+        if both_complete:
+            self.samples.extend(other.samples)
+        else:
+            self.samples = []
+
     def snapshot(self) -> Dict[str, float]:
         return {
             "count": self.count,
@@ -149,6 +172,39 @@ class Metrics:
         if self.backend_raw_bytes == 0:
             return 1.0
         return self.backend_stored_bytes / self.backend_raw_bytes
+
+    def deterministic_snapshot(self) -> Dict[str, int]:
+        """Pure event counters -- no wall-clock derived values.
+
+        Replaying the same seeded trace through a stepped (round-based)
+        fleet must produce byte-identical snapshots; latency histograms
+        and timelines are inherently timing-dependent, so fleet replay
+        determinism is asserted over exactly this view.
+        """
+        return {
+            "faults": self.faults,
+            "fault_zero_pages": self.fault_zero_pages,
+            "fault_compressed_pages": self.fault_compressed_pages,
+            "ms_swapped_out": self.ms_swapped_out,
+            "ms_swapped_in": self.ms_swapped_in,
+            "mp_swapped_out": self.mp_swapped_out,
+            "mp_swapped_in": self.mp_swapped_in,
+            "swap_out_batches": self.swap_out_batches,
+            "swap_in_batches": self.swap_in_batches,
+            "mp_swapped_out_batched": self.mp_swapped_out_batched,
+            "backend_batch_stores": self.backend_batch_stores,
+            "backend_batch_loads": self.backend_batch_loads,
+            "writer_cancels": self.writer_cancels,
+            "crc_checks": self.crc_checks,
+            "crc_failures": self.crc_failures,
+            "dmar_intercepts": self.dmar_intercepts,
+            "reclaim_rounds": self.reclaim_rounds,
+            "proactive_reclaims": self.proactive_reclaims,
+            "backend_zero_mps": self.backend_zero_mps,
+            "backend_compressed_mps": self.backend_compressed_mps,
+            "backend_raw_bytes": self.backend_raw_bytes,
+            "backend_stored_bytes": self.backend_stored_bytes,
+        }
 
     def snapshot(self) -> Dict[str, object]:
         return {

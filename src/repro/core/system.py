@@ -136,7 +136,52 @@ class TaijiSystem:
             self.scheduler.stop()
             self._background_started = False
 
+    def step_background(self, *, reclaim: bool = True) -> int:
+        """One synchronous background round (deterministic stepped mode).
+
+        The fleet layer drives many nodes from a single event loop: each
+        fleet tick runs every LRU scan shard once and -- when the
+        controller's stagger window says so -- one reclaim round, exactly
+        what the hv_sched BACK tasks would do, minus the wall-clock
+        slicing. Must not be mixed with ``start_background``.
+
+        Returns the number of MPs reclaimed this round.
+        """
+        if self._background_started:
+            raise InvalidStateError(
+                "step_background conflicts with running hv_sched threads")
+        nw = self.cfg.lru.workers
+        for w in range(nw):
+            self.lru.scan_shard(w, nw)
+        if not reclaim:
+            return 0
+        return self.engine.reclaim_round()
+
     # ---------------------------------------------------------------- stats
+    def snapshot(self) -> Dict[str, object]:
+        """Structured node snapshot for the fleet control plane.
+
+        ``deterministic`` holds only event counters/occupancy (byte-stable
+        across replays of the same seeded trace); ``latency`` carries the
+        timing-dependent percentiles separately.
+        """
+        free = self.phys.free_count
+        return {
+            "deterministic": {
+                "module_version": self.module_version,
+                "free_ms": free,
+                "zone": self.watermark.zone(free),
+                "n_reqs": len(self.reqs),
+                "lru": self.lru.counts(),
+                "metrics": self.metrics.deterministic_snapshot(),
+            },
+            "latency": {
+                "fault": self.metrics.fault_latency.snapshot(),
+                "swap_out": self.metrics.swap_out_latency.snapshot(),
+                "swap_in": self.metrics.swap_in_latency.snapshot(),
+            },
+        }
+
     def stats(self) -> Dict[str, object]:
         return {
             "module_version": self.module_version,

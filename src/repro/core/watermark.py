@@ -74,5 +74,21 @@ class WatermarkPolicy:
         with self._lock:
             return self._reclaiming
 
+    # ------------------------------------------------------------- reporting
+    def zone(self, free_ms: int) -> str:
+        """Watermark zone for fleet snapshots (coordination hook).
+
+        ``ok`` above high, ``band`` inside the reclaim hysteresis band,
+        ``low`` below low (reclaim definitely active), ``critical`` at or
+        below min (fault-path synchronous reclaim).
+        """
+        if free_ms <= self.min_ms:
+            return "critical"
+        if free_ms < self.low_ms:
+            return "low"
+        if free_ms < self.high_ms:
+            return "band"
+        return "ok"
+
     def describe(self) -> dict:
         return {"high": self.high_ms, "low": self.low_ms, "min": self.min_ms}

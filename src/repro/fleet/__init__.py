@@ -1,0 +1,21 @@
+"""Fleet control plane: multi-node elasticity orchestration (paper §5,
+"across more than 30,000 servers") + trace-driven workload replay.
+
+Layering:
+  node (NodeAgent = one TaijiSystem + entry table, stepped)
+  -> controller (admission, placement, staggered reclaim, rolling upgrade)
+  -> trace (TSV format, TraceGen synthesis, deterministic TraceReplayer)
+"""
+from .node import NodeAgent, NodeNotServingError
+from .controller import (REJECT_NO_CAPACITY, REJECT_OVERCOMMIT,
+                         FleetConfig, FleetController)
+from .trace import (TraceGen, TraceHeader, TraceReplayer, page_bytes,
+                    page_kind, paper_trace, parse_line, touch_addr)
+
+__all__ = [
+    "NodeAgent", "NodeNotServingError",
+    "FleetConfig", "FleetController",
+    "REJECT_OVERCOMMIT", "REJECT_NO_CAPACITY",
+    "TraceGen", "TraceHeader", "TraceReplayer",
+    "page_bytes", "page_kind", "paper_trace", "parse_line", "touch_addr",
+]

@@ -1,0 +1,290 @@
+"""FleetController -- multi-node elasticity orchestration (control plane).
+
+CLUES-style cluster orchestration adapted to memory elasticity: the
+controller owns fleet-wide *admission control* for elastic MS
+allocations, *pressure-aware placement* onto the least-pressured serving
+node, *staggered reclaim* coordination (nodes are partitioned into
+stagger groups; only one group's BACK reclaim fires per fleet tick, so
+the whole fleet never compresses/swaps in the same window), and *rolling
+hot-upgrade* orchestration with failure-domain batching and
+abort-on-regression.
+
+Concurrency model: one deterministic event loop. ``tick()`` is a fleet
+round that steps every node once; nothing runs on threads, so replaying
+a seeded trace is exactly reproducible (see ``trace.TraceReplayer``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+from ..core.hotupgrade import EngineModule
+from ..core.metrics import LatencyHistogram
+from .node import NodeAgent
+
+REJECT_OVERCOMMIT = "fleet_overcommit"
+REJECT_NO_CAPACITY = "no_serving_capacity"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Control-plane knobs (per-node knobs stay in TaijiConfig)."""
+
+    # fleet-wide admission cap: committed virtual MSs may not exceed this
+    # multiple of the fleet's managed physical MSs. Per-node overcommit is
+    # +50% (paper O3); holding the *fleet* at +25% keeps aggregate reclaim
+    # pressure bounded even when placement is skewed.
+    overcommit_cap: float = 1.25
+    # number of reclaim stagger groups: node i belongs to group
+    # (i % groups); group (tick % groups) reclaims this tick.
+    reclaim_stagger_groups: int = 2
+    # rolling upgrade: rounds a node drains before its module swap
+    upgrade_drain_rounds: int = 2
+    # optional latency guard (abort-on-regression): if set, a batch whose
+    # post-upgrade fleet p90 fault latency exceeds guard * the pre-upgrade
+    # baseline aborts the rollout. Timing-dependent, so it is OFF by
+    # default; the deterministic health probe always runs.
+    latency_guard_factor: Optional[float] = None
+    latency_guard_min_samples: int = 200
+
+
+class _RollingUpgrade:
+    def __init__(self, module_cls: Type[EngineModule],
+                 batches: List[List[NodeAgent]], drain_rounds: int,
+                 baseline_p90_ns: float) -> None:
+        self.module_cls = module_cls
+        self.batches = batches
+        self.drain_rounds = drain_rounds
+        self.baseline_p90_ns = baseline_p90_ns
+        self.batch_idx = 0
+        self.in_flight = False
+        # fleet fault histogram at batch start: the latency guard judges
+        # only the samples recorded *since*, so pre-upgrade history can't
+        # dilute a regression
+        self.pre_batch_hist: Optional[LatencyHistogram] = None
+
+
+def _hist_delta(post: LatencyHistogram,
+                pre: LatencyHistogram) -> LatencyHistogram:
+    """Samples recorded between two cumulative histogram states.
+
+    Buckets/counters are additive so they subtract cleanly; the exact
+    reservoir does not, so the delta keeps no samples and ``percentile``
+    falls back to bucket math.
+    """
+    d = LatencyHistogram()
+    d.buckets = [a - b for a, b in zip(post.buckets, pre.buckets)]
+    d.count = post.count - pre.count
+    d.total_ns = post.total_ns - pre.total_ns
+    d.max_ns = post.max_ns
+    return d
+
+
+class FleetController:
+    def __init__(self, nodes: Sequence[NodeAgent],
+                 fleet_cfg: Optional[FleetConfig] = None) -> None:
+        self.nodes = list(nodes)
+        if not self.nodes:
+            raise ValueError("fleet needs at least one node")
+        self.cfg = fleet_cfg or FleetConfig()
+        if self.cfg.reclaim_stagger_groups < 1:
+            raise ValueError("reclaim_stagger_groups must be >= 1")
+        self.ticks = 0
+        # admission counters
+        self.admitted = 0
+        self.rejections: Dict[str, int] = {REJECT_OVERCOMMIT: 0,
+                                           REJECT_NO_CAPACITY: 0}
+        self.placements: Dict[int, int] = {n.node_id: 0 for n in self.nodes}
+        self.reclaimed_mps = 0
+        # rolling upgrade state
+        self._rolling: Optional[_RollingUpgrade] = None
+        self.upgrade_batches_done = 0
+        self.upgrade_aborted = False
+        self.upgrade_abort_reason = ""
+
+    # ---------------------------------------------------------- fleet sums
+    def fleet_managed_ms(self) -> int:
+        return sum(n.managed_phys_ms for n in self.nodes)
+
+    def fleet_committed_ms(self) -> int:
+        return sum(len(n.allocated) for n in self.nodes)
+
+    def fleet_free_ms(self) -> int:
+        return sum(n.free_ms for n in self.nodes)
+
+    # ----------------------------------------------------------- admission
+    def admit_alloc(self) -> Tuple[Optional[NodeAgent], Optional[int], str]:
+        """Admission control + placement for one elastic MS allocation.
+
+        Returns ``(node, gfn, "ok")`` on success, else
+        ``(None, None, reason)``. Placement is pressure-aware: the
+        least-pressured serving node with virtual headroom wins (node_id
+        breaks ties deterministically).
+        """
+        cap = int(self.fleet_managed_ms() * self.cfg.overcommit_cap)
+        if self.fleet_committed_ms() + 1 > cap:
+            self.rejections[REJECT_OVERCOMMIT] += 1
+            return None, None, REJECT_OVERCOMMIT
+        candidates = [n for n in self.nodes
+                      if n.serving and len(n.allocated) < n.capacity_ms]
+        if not candidates:
+            self.rejections[REJECT_NO_CAPACITY] += 1
+            return None, None, REJECT_NO_CAPACITY
+        node = min(candidates, key=lambda n: (n.pressure(), n.node_id))
+        gfn = node.alloc_ms()
+        self.admitted += 1
+        self.placements[node.node_id] += 1
+        return node, gfn, "ok"
+
+    # --------------------------------------------------------- fleet round
+    def reclaim_group_of(self, node_index: int) -> int:
+        return node_index % self.cfg.reclaim_stagger_groups
+
+    def tick(self) -> int:
+        """One fleet round: step every node, stagger reclaim windows,
+        drive any in-flight rolling upgrade. Returns MPs reclaimed."""
+        groups = self.cfg.reclaim_stagger_groups
+        active_group = self.ticks % groups
+        reclaimed = 0
+        for i, node in enumerate(self.nodes):
+            window = node.serving and self.reclaim_group_of(i) == active_group
+            reclaimed += node.step(reclaim=window)
+        self.reclaimed_mps += reclaimed
+        self._drive_rolling()
+        self.ticks += 1
+        return reclaimed
+
+    # ------------------------------------------------------ rolling upgrade
+    def start_rolling_upgrade(self, module_cls: Type[EngineModule],
+                              drain_rounds: Optional[int] = None) -> None:
+        """Plan a fleet-wide rolling hot-upgrade.
+
+        Nodes are batched by failure domain (one domain in flight at a
+        time) so a bad module build can never take out more than one
+        domain before the health probes abort the rollout.
+        """
+        if self._rolling is not None:
+            raise RuntimeError("a rolling upgrade is already in flight")
+        domains: Dict[int, List[NodeAgent]] = {}
+        for n in self.nodes:
+            domains.setdefault(n.failure_domain, []).append(n)
+        batches = [sorted(domains[d], key=lambda n: n.node_id)
+                   for d in sorted(domains)]
+        self.upgrade_aborted = False
+        self.upgrade_abort_reason = ""
+        self.upgrade_batches_done = 0
+        self._rolling = _RollingUpgrade(
+            module_cls, batches,
+            drain_rounds if drain_rounds is not None
+            else self.cfg.upgrade_drain_rounds,
+            baseline_p90_ns=self._fleet_fault_hist().percentile(0.90))
+
+    @property
+    def upgrade_in_progress(self) -> bool:
+        return self._rolling is not None
+
+    def _drive_rolling(self) -> None:
+        ru = self._rolling
+        if ru is None:
+            return
+        if ru.in_flight:
+            batch = ru.batches[ru.batch_idx]
+            if any(not n.serving for n in batch):
+                return                   # still draining/swapping
+            ru.in_flight = False
+            if not self._validate_batch(batch, ru):
+                self.upgrade_aborted = True
+                self._rolling = None
+                return
+            self.upgrade_batches_done += 1
+            ru.batch_idx += 1
+        if ru.batch_idx >= len(ru.batches):
+            self._rolling = None         # rollout complete
+            return
+        if self.cfg.latency_guard_factor is not None:
+            ru.pre_batch_hist = self._fleet_fault_hist()
+        for n in ru.batches[ru.batch_idx]:
+            n.begin_upgrade(ru.module_cls, ru.drain_rounds)
+        ru.in_flight = True
+
+    def _validate_batch(self, batch: List[NodeAgent],
+                        ru: _RollingUpgrade) -> bool:
+        """Abort-on-regression gate after each failure-domain batch."""
+        target = ru.module_cls.VERSION
+        for n in batch:
+            if n.upgrade_failed or n.module_version != target:
+                self.upgrade_abort_reason = (
+                    f"node {n.node_id}: module swap failed "
+                    f"(version {n.module_version} != {target})")
+                return False
+            if not n.health_probe():
+                self.upgrade_abort_reason = (
+                    f"node {n.node_id}: post-upgrade health probe failed")
+                return False
+        guard = self.cfg.latency_guard_factor
+        if (guard is not None and ru.baseline_p90_ns > 0
+                and ru.pre_batch_hist is not None):
+            since = _hist_delta(self._fleet_fault_hist(), ru.pre_batch_hist)
+            if (since.count >= self.cfg.latency_guard_min_samples
+                    and since.percentile(0.90) > guard * ru.baseline_p90_ns):
+                self.upgrade_abort_reason = (
+                    f"fleet p90 fault latency regressed past "
+                    f"{guard:.1f}x baseline")
+                return False
+        return True
+
+    # ------------------------------------------------------------ snapshots
+    def _fleet_fault_hist(self) -> LatencyHistogram:
+        agg = LatencyHistogram()
+        for n in self.nodes:
+            agg.merge(n.system.metrics.fault_latency)
+        return agg
+
+    def latency_snapshot(self) -> Dict[str, object]:
+        """Fleet-wide latency aggregation (timing-dependent)."""
+        out: Dict[str, object] = {}
+        fault_agg: Optional[LatencyHistogram] = None
+        for name, pick in (("fault", lambda m: m.fault_latency),
+                           ("swap_out", lambda m: m.swap_out_latency),
+                           ("swap_in", lambda m: m.swap_in_latency)):
+            agg = LatencyHistogram()
+            for n in self.nodes:
+                agg.merge(pick(n.system.metrics))
+            out[name] = agg.snapshot()
+            if name == "fault":
+                fault_agg = agg
+        # the paper's 10us claim is for passive swap-in (fault path)
+        out["frac_fault_under_10us"] = fault_agg.fraction_below(10_000)
+        return out
+
+    def snapshot(self) -> Dict[str, object]:
+        return {
+            "deterministic": {
+                "ticks": self.ticks,
+                "admitted": self.admitted,
+                "rejections": dict(self.rejections),
+                "placements": {str(k): v
+                               for k, v in sorted(self.placements.items())},
+                "reclaimed_mps": self.reclaimed_mps,
+                "fleet_committed_ms": self.fleet_committed_ms(),
+                "fleet_free_ms": self.fleet_free_ms(),
+                "upgrade_in_progress": self.upgrade_in_progress,
+                "upgrade_batches_done": self.upgrade_batches_done,
+                "upgrade_aborted": self.upgrade_aborted,
+                "upgrade_abort_reason": self.upgrade_abort_reason,
+                "nodes": [n.snapshot()["deterministic"]
+                          for n in self.nodes],
+            },
+            "latency": self.latency_snapshot(),
+        }
+
+    def deterministic_bytes(self) -> bytes:
+        """Canonical serialization of the deterministic snapshot: two
+        replays of the same seeded trace must produce identical bytes."""
+        return json.dumps(self.snapshot()["deterministic"],
+                          sort_keys=True).encode()
+
+    def close(self) -> None:
+        for n in self.nodes:
+            n.close()

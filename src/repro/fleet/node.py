@@ -1,0 +1,206 @@
+"""NodeAgent -- one TaijiSystem as a member of a multi-node fleet.
+
+The paper deploys Taiji "across more than 30,000 servers"; the fleet
+layer reproduces the control-plane half of that claim. A NodeAgent wraps
+one :class:`TaijiSystem` plus its hot-upgrade entry table (``tj.ko``
+analogue) and exposes:
+
+  * deterministic stepped operation -- ``step()`` is one background round
+    (LRU scan shards + optionally one reclaim round), driven by the
+    fleet controller's event loop instead of hv_sched threads, so fleet
+    simulations are exactly reproducible on the single-core container;
+  * periodic snapshots -- free-MS, watermark zone, swap/backend counters
+    and the upgrade epoch, split into a byte-stable ``deterministic``
+    view and a timing-dependent ``latency`` view;
+  * per-node rolling-upgrade mechanics -- drain (stop serving), swap the
+    engine module through ``core/hotupgrade.py``, resume -- which the
+    controller sequences across failure domains.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Set, Type
+
+from ..core.config import TaijiConfig
+from ..core.errors import ABIMismatchError, InvalidStateError, TaijiError
+from ..core.hotupgrade import EngineModule, EntryOps, hot_upgrade, install_module
+from ..core.system import TaijiSystem
+
+# pressure penalty per watermark zone: a node already reclaiming is a
+# worse placement target than raw occupancy alone suggests
+_ZONE_PENALTY = {"ok": 0.0, "band": 0.25, "low": 0.5, "critical": 1.0}
+
+
+class NodeNotServingError(InvalidStateError):
+    """Raised when guest traffic hits a node that is draining mid-upgrade."""
+
+
+class _PendingUpgrade:
+    __slots__ = ("module_cls", "rounds_left")
+
+    def __init__(self, module_cls: Type[EngineModule], rounds: int) -> None:
+        self.module_cls = module_cls
+        self.rounds_left = rounds
+
+
+class NodeAgent:
+    def __init__(self, node_id: int, cfg: TaijiConfig,
+                 failure_domain: int = 0) -> None:
+        self.node_id = node_id
+        self.cfg = cfg
+        self.failure_domain = failure_domain
+        self.system = TaijiSystem(cfg)
+        self.entry = EntryOps()
+        install_module(self.system, self.entry, EngineModule(self.system))
+
+        self.allocated: Set[int] = set()
+        self.rounds = 0                  # stepped background rounds executed
+        self.reclaim_windows = 0         # rounds in which reclaim fired
+        self.upgrade_epoch = 0           # completed hot-upgrades
+        self.upgrade_failed = False      # last upgrade attempt failed (ABI)
+        self._upgrade: Optional[_PendingUpgrade] = None
+
+    # -------------------------------------------------------------- serving
+    @property
+    def serving(self) -> bool:
+        """False while draining mid-upgrade: no guest traffic is served."""
+        return self._upgrade is None
+
+    def _check_serving(self) -> None:
+        if not self.serving:
+            raise NodeNotServingError(
+                f"node {self.node_id} is draining for hot-upgrade")
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def capacity_ms(self) -> int:
+        """Allocatable virtual MSs (the guest-visible elastic space)."""
+        return self.cfg.n_virt_ms - self.cfg.mpool_reserve_ms
+
+    @property
+    def managed_phys_ms(self) -> int:
+        """Physical MSs backing guest memory (excludes the mpool arena)."""
+        return self.cfg.n_phys_ms - self.cfg.mpool_reserve_ms
+
+    @property
+    def free_ms(self) -> int:
+        return self.system.phys.free_count
+
+    def pressure(self) -> float:
+        """Placement score: physical occupancy plus a watermark-zone
+        penalty, so admission steers new load away from nodes that are
+        already reclaiming (or worse, in fault-path reclaim)."""
+        free = self.free_ms
+        occupancy = 1.0 - free / max(1, self.managed_phys_ms)
+        return occupancy + _ZONE_PENALTY[self.system.watermark.zone(free)]
+
+    # -------------------------------------------------------- guest traffic
+    def alloc_ms(self) -> int:
+        self._check_serving()
+        gfn = self.system.guest_alloc_ms()
+        self.allocated.add(gfn)
+        return gfn
+
+    def free_ms_gfn(self, gfn: int) -> None:
+        self._check_serving()
+        self.system.guest_free_ms(gfn)
+        self.allocated.discard(gfn)
+
+    def write_mp(self, gfn: int, mp: int, data: bytes) -> None:
+        self._check_serving()
+        self.system.write(self.system.ms_addr(gfn, mp=mp), data)
+
+    def read_mp(self, gfn: int, mp: int,
+                nbytes: Optional[int] = None) -> bytes:
+        self._check_serving()
+        n = self.cfg.mp_bytes if nbytes is None else nbytes
+        return self.system.read(self.system.ms_addr(gfn, mp=mp), n)
+
+    # ----------------------------------------------------- stepped background
+    def step(self, *, reclaim: bool = True) -> int:
+        """One deterministic background round.
+
+        Draining nodes only advance their upgrade countdown (the module
+        swap happens at the end of the drain); serving nodes run every
+        LRU scan shard and, when the controller's stagger window allows,
+        one reclaim round -- routed through the entry table so an
+        upgraded module's reclaim implementation takes over seamlessly.
+        """
+        self.rounds += 1
+        if self._upgrade is not None:
+            self._upgrade.rounds_left -= 1
+            if self._upgrade.rounds_left <= 0:
+                self._finish_upgrade()
+            return 0
+        self.system.step_background(reclaim=False)    # LRU scan shards only
+        if not reclaim:
+            return 0
+        self.reclaim_windows += 1
+        return int(self.entry.call("reclaim_round"))
+
+    # ----------------------------------------------------------- hot-upgrade
+    def begin_upgrade(self, module_cls: Type[EngineModule],
+                      drain_rounds: int = 1) -> None:
+        if self._upgrade is not None:
+            raise InvalidStateError(f"node {self.node_id} already upgrading")
+        self._upgrade = _PendingUpgrade(module_cls, max(1, drain_rounds))
+
+    def _finish_upgrade(self) -> None:
+        assert self._upgrade is not None
+        module_cls = self._upgrade.module_cls
+        try:
+            hot_upgrade(self.system, self.entry, module_cls(self.system))
+        except (ABIMismatchError, TaijiError):
+            self.upgrade_failed = True
+        else:
+            self.upgrade_failed = False
+            self.upgrade_epoch += 1
+        finally:
+            self._upgrade = None
+
+    @property
+    def module_version(self) -> int:
+        return self.system.module_version
+
+    def health_probe(self) -> bool:
+        """Deterministic post-upgrade self-check.
+
+        Pushes one MS through the full data path of the (possibly new)
+        module: alloc, write a marker, active swap-out through the entry
+        table, fault it back in, verify bytes, free. Abort-on-regression
+        for the rolling upgrade keys off this (plus the optional latency
+        guard in the controller).
+        """
+        if self.upgrade_failed:
+            return False
+        if len(self.allocated) >= self.capacity_ms:
+            return True                  # no room for a probe: version-only
+        marker = bytes([(0x5A + self.node_id) & 0xFF]) * 32
+        try:
+            gfn = self.alloc_ms()
+            try:
+                self.write_mp(gfn, 0, marker)
+                self.entry.call("swap_out_ms", gfn)
+                ok = self.read_mp(gfn, 0, len(marker)) == marker
+            finally:
+                self.free_ms_gfn(gfn)
+        except TaijiError:
+            return False
+        return ok and self.system.metrics.crc_failures == 0
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot(self) -> Dict[str, object]:
+        s = self.system.snapshot()
+        s["deterministic"].update(
+            node_id=self.node_id,
+            failure_domain=self.failure_domain,
+            serving=self.serving,
+            allocated_ms=len(self.allocated),
+            rounds=self.rounds,
+            reclaim_windows=self.reclaim_windows,
+            upgrade_epoch=self.upgrade_epoch,
+            upgrade_failed=self.upgrade_failed,
+        )
+        return s
+
+    def close(self) -> None:
+        self.system.close()

@@ -1,0 +1,364 @@
+"""Trace-driven workload replay (tracehm-style TSV traces).
+
+A trace is a TSV file: one header comment carrying the parameters every
+replayer needs to reproduce payloads byte-for-byte, then one op per line:
+
+    # taiji-trace v1 seed=7 ms_bytes=16384 mps_per_ms=8 zero=0.60 comp=0.25
+    0	alloc	12	0
+    1	touch	0x30800	1
+    2	tick	6	0
+    3	touch	0x30800	0
+    4	upgrade	2	0
+    5	free	12	0
+
+Columns are ``seq, op, ms/addr, is_write``:
+
+  * ``alloc``/``free`` -- arg is a trace-level MS *token*; the replayer
+    maps tokens to (node, gfn) through the fleet controller's admission
+    path, so the trace itself is placement-agnostic.
+  * ``touch``  -- arg is a hex address ``token*ms_bytes + mp*mp_bytes``;
+    ``is_write`` selects guest write (payload derived deterministically
+    from the header seed) vs. guest read (faulting swapped MPs back in).
+  * ``tick``   -- arg fleet controller rounds to run (BACK phases: LRU
+    aging + staggered reclaim windows).
+  * ``upgrade``-- start a rolling hot-upgrade; arg is the per-node drain
+    duration in rounds.
+
+Everything is seeded and single-threaded (round-based), so replaying the
+same trace twice yields byte-identical deterministic snapshots.
+"""
+from __future__ import annotations
+
+import json
+import random
+import zlib
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+TRACE_MAGIC = "taiji-trace v1"
+
+OP_ALLOC = "alloc"
+OP_FREE = "free"
+OP_TOUCH = "touch"
+OP_TICK = "tick"
+OP_UPGRADE = "upgrade"
+
+# paper Fig 15c production mix: 76.79% zero pages, 23.21% compressed at
+# ~47.63% ratio. The generator defaults add an incompressible tail so the
+# backend's raw branch is exercised too.
+DEFAULT_ZERO_FRAC = 0.60
+DEFAULT_COMP_FRAC = 0.25
+
+K_PAGE_ZERO, K_PAGE_COMP, K_PAGE_RAND = "zero", "comp", "rand"
+
+
+# --------------------------------------------------------------- payloads
+def _page_hash(seed: int, token: int, mp: int) -> int:
+    return zlib.crc32(f"{seed}/{token}/{mp}".encode())
+
+
+def page_kind(seed: int, token: int, mp: int,
+              zero_frac: float, comp_frac: float) -> str:
+    """Deterministic page class for (trace, token, mp) -- no RNG state."""
+    u = (_page_hash(seed, token, mp) & 0xFFFFFF) / float(1 << 24)
+    if u < zero_frac:
+        return K_PAGE_ZERO
+    if u < zero_frac + comp_frac:
+        return K_PAGE_COMP
+    return K_PAGE_RAND
+
+
+def page_bytes(seed: int, token: int, mp: int, mp_bytes: int,
+               zero_frac: float, comp_frac: float) -> bytes:
+    """The payload a ``touch`` write carries: purely a function of the
+    trace header + address, so generator, replayer and verifier agree."""
+    kind = page_kind(seed, token, mp, zero_frac, comp_frac)
+    if kind == K_PAGE_ZERO:
+        return bytes(mp_bytes)
+    h = _page_hash(seed, token, mp)
+    rng = np.random.default_rng(h)
+    if kind == K_PAGE_COMP:
+        # ~50%-compressible: structured half + incompressible half
+        structured = np.full(mp_bytes // 2, h & 0xFF, np.uint8)
+        noise = rng.integers(0, 256, mp_bytes - mp_bytes // 2, dtype=np.int64)
+        return structured.tobytes() + noise.astype(np.uint8).tobytes()
+    return rng.integers(0, 256, mp_bytes, dtype=np.int64).astype(
+        np.uint8).tobytes()
+
+
+def touch_addr(token: int, mp: int, ms_bytes: int, mp_bytes: int) -> int:
+    return token * ms_bytes + mp * mp_bytes
+
+
+# ------------------------------------------------------------------ format
+class TraceHeader:
+    def __init__(self, seed: int, ms_bytes: int, mps_per_ms: int,
+                 zero_frac: float, comp_frac: float) -> None:
+        self.seed = seed
+        self.ms_bytes = ms_bytes
+        self.mps_per_ms = mps_per_ms
+        self.mp_bytes = ms_bytes // mps_per_ms
+        self.zero_frac = zero_frac
+        self.comp_frac = comp_frac
+
+    def line(self) -> str:
+        return (f"# {TRACE_MAGIC} seed={self.seed} ms_bytes={self.ms_bytes} "
+                f"mps_per_ms={self.mps_per_ms} zero={self.zero_frac:.6g} "
+                f"comp={self.comp_frac:.6g}")
+
+    @classmethod
+    def parse(cls, line: str) -> "TraceHeader":
+        if TRACE_MAGIC not in line:
+            raise ValueError(f"not a taiji trace header: {line!r}")
+        kv = dict(tok.split("=", 1) for tok in line.split() if "=" in tok)
+        return cls(seed=int(kv["seed"]), ms_bytes=int(kv["ms_bytes"]),
+                   mps_per_ms=int(kv["mps_per_ms"]),
+                   zero_frac=float(kv["zero"]), comp_frac=float(kv["comp"]))
+
+
+def format_line(seq: int, op: str, arg: int, is_write: int) -> str:
+    if op == OP_TOUCH:
+        return f"{seq}\t{op}\t0x{arg:x}\t{is_write}"
+    return f"{seq}\t{op}\t{arg}\t{is_write}"
+
+
+def parse_line(line: str) -> Tuple[int, str, int, int]:
+    seq_s, op, arg_s, w_s = line.rstrip("\n").split("\t")
+    base = 16 if arg_s.startswith("0x") else 10
+    return int(seq_s), op, int(arg_s, base), int(w_s)
+
+
+# --------------------------------------------------------------- generator
+class TraceGen:
+    """Synthesizes the paper's workload shapes as a seeded trace.
+
+    Phases compose: FRONT fill (allocs + page-mix writes), BACK aging
+    (ticks that age the LRU and fire staggered reclaim windows), fault
+    bursts (Zipf-popular reads over the filled set, faulting swapped MPs
+    back in), churn (free/realloc) and a rolling hot-upgrade marker.
+    """
+
+    def __init__(self, seed: int, ms_bytes: int, mps_per_ms: int,
+                 zero_frac: float = DEFAULT_ZERO_FRAC,
+                 comp_frac: float = DEFAULT_COMP_FRAC) -> None:
+        self.header = TraceHeader(seed, ms_bytes, mps_per_ms,
+                                  zero_frac, comp_frac)
+        self._rng = random.Random(seed)
+        self._ops: List[Tuple[str, int, int]] = []
+        self._next_token = 0
+        self._live: List[int] = []
+
+    # ------------------------------------------------------------- phases
+    def front_fill(self, n_ms: int, write_frac: float = 1.0) -> List[int]:
+        """FRONT phase: allocate ``n_ms`` sections, write the page mix."""
+        hdr = self.header
+        tokens = []
+        for _ in range(n_ms):
+            token = self._next_token
+            self._next_token += 1
+            self._ops.append((OP_ALLOC, token, 0))
+            self._live.append(token)
+            tokens.append(token)
+            for mp in range(hdr.mps_per_ms):
+                if write_frac >= 1.0 or self._rng.random() < write_frac:
+                    addr = touch_addr(token, mp, hdr.ms_bytes, hdr.mp_bytes)
+                    self._ops.append((OP_TOUCH, addr, 1))
+        return tokens
+
+    def back_phase(self, n_ticks: int) -> None:
+        """BACK phase: controller rounds only (aging + reclaim windows)."""
+        self._ops.append((OP_TICK, n_ticks, 0))
+
+    def fault_burst(self, n_touches: int, zipf_a: float = 1.2,
+                    tick_every: int = 0) -> None:
+        """Read burst with Zipf MS popularity and sequential MP locality."""
+        hdr = self.header
+        if not self._live:
+            return
+        ranks = np.arange(1, len(self._live) + 1, dtype=np.float64)
+        pop = 1.0 / ranks ** zipf_a
+        weights = list(pop / pop.sum())
+        cursor: Dict[int, int] = {}
+        for i in range(n_touches):
+            token = self._rng.choices(self._live, weights=weights)[0]
+            mp = cursor.get(token, 0) % hdr.mps_per_ms
+            cursor[token] = mp + 1
+            addr = touch_addr(token, mp, hdr.ms_bytes, hdr.mp_bytes)
+            self._ops.append((OP_TOUCH, addr, 0))
+            if tick_every and (i + 1) % tick_every == 0:
+                self._ops.append((OP_TICK, 1, 0))
+
+    def churn(self, n_frees: int, n_allocs: int) -> None:
+        """Free a seeded sample, then re-allocate fresh sections."""
+        n_frees = min(n_frees, len(self._live))
+        for token in self._rng.sample(self._live, n_frees):
+            self._live.remove(token)
+            self._ops.append((OP_FREE, token, 0))
+        self.front_fill(n_allocs)
+
+    def rolling_upgrade(self, drain_rounds: int = 2,
+                        settle_ticks: int = 8) -> None:
+        """Rolling hot-upgrade marker + enough ticks to complete it."""
+        self._ops.append((OP_UPGRADE, drain_rounds, 0))
+        self._ops.append((OP_TICK, settle_ticks, 0))
+
+    # -------------------------------------------------------------- output
+    def lines(self) -> List[str]:
+        out = [self.header.line()]
+        out.extend(format_line(i, op, arg, w)
+                   for i, (op, arg, w) in enumerate(self._ops))
+        return out
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines()) + "\n")
+
+    @property
+    def n_ops(self) -> int:
+        return len(self._ops)
+
+
+class TraceReplayer:
+    """Deterministic seeded trace replay through a fleet controller.
+
+    Single-threaded, round-based: trace lines are applied in order, so
+    two replays of the same trace through identically-configured fleets
+    produce byte-identical deterministic snapshots. Placement is decided
+    live by the controller's admission path; tokens that were rejected at
+    admission simply drop their later touches (counted, like a guest VM
+    that was never scheduled onto the fleet).
+    """
+
+    def __init__(self, controller, lines: Iterable[str], *,
+                 upgrade_module_cls=None, verify_reads: bool = True) -> None:
+        from ..core.hotupgrade import EngineModuleV2
+        from .controller import REJECT_NO_CAPACITY, REJECT_OVERCOMMIT
+        from .node import NodeNotServingError
+        self._not_serving_exc = NodeNotServingError
+        self.controller = controller
+        self.upgrade_module_cls = upgrade_module_cls or EngineModuleV2
+        self.verify_reads = verify_reads
+
+        lines = [ln for ln in lines if ln.strip()]
+        if not lines or not lines[0].startswith("#"):
+            raise ValueError("trace must start with a header comment")
+        self.header = TraceHeader.parse(lines[0])
+        self._body = [ln for ln in lines[1:] if not ln.startswith("#")]
+
+        self.placed: Dict[int, Tuple[object, int]] = {}   # token -> (node, gfn)
+        self.written: Set = set()                          # (token, mp) pairs
+        self.counters: Dict[str, int] = {
+            "ops": 0, "allocs": 0, "frees": 0, "reads": 0, "writes": 0,
+            "ticks": 0, "upgrades": 0, "touch_unplaced": 0,
+            "touch_not_serving": 0, "free_not_serving": 0,
+            "verify_failures": 0,
+            "reject_" + REJECT_OVERCOMMIT: 0,
+            "reject_" + REJECT_NO_CAPACITY: 0,
+        }
+
+    # --------------------------------------------------------------- replay
+    def run(self) -> Dict[str, object]:
+        for line in self._body:
+            _seq, op, arg, is_write = parse_line(line)
+            self.counters["ops"] += 1
+            if op == OP_ALLOC:
+                self._op_alloc(arg)
+            elif op == OP_FREE:
+                self._op_free(arg)
+            elif op == OP_TOUCH:
+                self._op_touch(arg, is_write)
+            elif op == OP_TICK:
+                for _ in range(arg):
+                    self.controller.tick()
+                self.counters["ticks"] += arg
+            elif op == OP_UPGRADE:
+                self.controller.start_rolling_upgrade(
+                    self.upgrade_module_cls, drain_rounds=arg)
+                self.counters["upgrades"] += 1
+            else:
+                raise ValueError(f"unknown trace op {op!r}: {line!r}")
+        return self.result()
+
+    def _op_alloc(self, token: int) -> None:
+        node, gfn, reason = self.controller.admit_alloc()
+        self.counters["allocs"] += 1
+        if node is None:
+            key = "reject_" + reason
+            self.counters[key] = self.counters.get(key, 0) + 1
+            return
+        self.placed[token] = (node, gfn)
+
+    def _op_free(self, token: int) -> None:
+        placed = self.placed.pop(token, None)
+        if placed is None:
+            return
+        node, gfn = placed
+        try:
+            node.free_ms_gfn(gfn)
+        except self._not_serving_exc:
+            # the owner is draining: the free is lost traffic, like any
+            # other op against a mid-upgrade node; its data stays live
+            self.counters["free_not_serving"] += 1
+            self.placed[token] = placed
+            return
+        self.counters["frees"] += 1
+        self.written = {(t, m) for t, m in self.written if t != token}
+
+    def _op_touch(self, addr: int, is_write: int) -> None:
+        hdr = self.header
+        token = addr // hdr.ms_bytes
+        mp = (addr % hdr.ms_bytes) // hdr.mp_bytes
+        placed = self.placed.get(token)
+        if placed is None:
+            self.counters["touch_unplaced"] += 1
+            return
+        node, gfn = placed
+        try:
+            if is_write:
+                node.write_mp(gfn, mp, page_bytes(
+                    hdr.seed, token, mp, hdr.mp_bytes,
+                    hdr.zero_frac, hdr.comp_frac))
+                self.written.add((token, mp))
+                self.counters["writes"] += 1
+            else:
+                got = node.read_mp(gfn, mp)
+                self.counters["reads"] += 1
+                if self.verify_reads and (token, mp) in self.written:
+                    want = page_bytes(hdr.seed, token, mp, hdr.mp_bytes,
+                                      hdr.zero_frac, hdr.comp_frac)
+                    if got != want:
+                        self.counters["verify_failures"] += 1
+        except self._not_serving_exc:
+            self.counters["touch_not_serving"] += 1
+
+    # --------------------------------------------------------------- result
+    def result(self) -> Dict[str, object]:
+        snap = self.controller.snapshot()
+        snap["deterministic"]["replay"] = dict(sorted(self.counters.items()))
+        return snap
+
+    def deterministic_bytes(self) -> bytes:
+        return json.dumps(self.result()["deterministic"],
+                          sort_keys=True).encode()
+
+
+def paper_trace(seed: int, ms_bytes: int, mps_per_ms: int, *,
+                fill_ms: int, burst: int, churn_frees: int = 0,
+                upgrade: bool = True,
+                zero_frac: float = DEFAULT_ZERO_FRAC,
+                comp_frac: float = DEFAULT_COMP_FRAC) -> TraceGen:
+    """The canonical scenario: fill past the fleet admission cap, age +
+    reclaim, fault-burst, churn, then one rolling hot-upgrade and a
+    second burst against the upgraded modules."""
+    gen = TraceGen(seed, ms_bytes, mps_per_ms, zero_frac, comp_frac)
+    gen.front_fill(fill_ms)
+    gen.back_phase(8)                       # age to COLD + reclaim windows
+    gen.fault_burst(burst, tick_every=48)   # faults vs. staggered BACK
+    if churn_frees:
+        gen.churn(churn_frees, churn_frees // 2)
+        gen.back_phase(4)
+    if upgrade:
+        gen.rolling_upgrade(drain_rounds=2)
+        gen.fault_burst(burst // 2, tick_every=64)
+    return gen

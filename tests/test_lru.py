@@ -1,9 +1,12 @@
 """Multi-level LRU (paper §4.2.1, Fig 7): transitions, smoothing, order."""
-import pytest
+import random
 
-pytest.importorskip("hypothesis")
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI pins hypothesis
+    HAVE_HYPOTHESIS = False
 
 from repro.core.config import small_test_config
 from repro.core.lru import (ACTIVE, COLD, COLD_INT, HOT, HOT_INT, INACTIVE,
@@ -84,9 +87,8 @@ def test_swapin_joins_hot_set():
     assert lru.level_of(5) == HOT
 
 
-@given(st.lists(st.tuples(st.integers(0, 15), st.booleans()), max_size=120))
-@settings(max_examples=40, deadline=None)
-def test_invariants_under_random_traffic(ops):
+def _run_traffic(ops):
+    """Shared property body: hypothesis and the seeded fallback drive it."""
     lru, bits = make()
     tracked = set()
     for gfn, access in ops:
@@ -100,3 +102,23 @@ def test_invariants_under_random_traffic(ops):
     assert lru.tracked() == len(tracked)
     counts = lru.counts()
     assert sum(counts.values()) == len(tracked)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.integers(0, 15), st.booleans()),
+                    max_size=120))
+    @settings(max_examples=40, deadline=None)
+    def test_invariants_under_random_traffic(ops):
+        _run_traffic(ops)
+
+
+def test_invariants_under_seeded_random_traffic():
+    """Seeded-``random`` fallback fuzz: randomized coverage without
+    hypothesis (not installed in the local container; CI keeps the
+    hypothesis path above)."""
+    rng = random.Random(0x7A111)
+    for _case in range(40):
+        n_ops = rng.randrange(0, 121)
+        ops = [(rng.randrange(0, 16), rng.random() < 0.5)
+               for _ in range(n_ops)]
+        _run_traffic(ops)

@@ -1,16 +1,17 @@
 """Property tests for the req red-black tree (paper Fig 8 (1.1-1.3))."""
-import pytest
+import random
 
-pytest.importorskip("hypothesis")
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI pins hypothesis
+    HAVE_HYPOTHESIS = False
 
 from repro.core.rbtree import RBTree
 
 
-@given(st.lists(st.integers(0, 10_000), unique=True, max_size=200))
-@settings(max_examples=60, deadline=None)
-def test_insert_find_invariants(keys):
+def _check_insert_find(keys):
     t = RBTree()
     for k in keys:
         t.insert(k, k * 2)
@@ -21,14 +22,10 @@ def test_insert_find_invariants(keys):
     assert [k for k, _ in t.items()] == sorted(keys)
 
 
-@given(st.lists(st.integers(0, 1000), unique=True, min_size=1, max_size=120),
-       st.data())
-@settings(max_examples=60, deadline=None)
-def test_delete_keeps_invariants(keys, data):
+def _check_delete(keys, to_del):
     t = RBTree()
     for k in keys:
         t.insert(k, str(k))
-    to_del = data.draw(st.lists(st.sampled_from(keys), unique=True))
     for k in to_del:
         assert t.delete(k) == str(k)
         t.check_invariants()
@@ -38,12 +35,60 @@ def test_delete_keeps_invariants(keys, data):
         assert t.find(k) is None
 
 
-@given(st.lists(st.integers(0, 1000), unique=True, min_size=1, max_size=80),
-       st.integers(0, 1001))
-@settings(max_examples=60, deadline=None)
-def test_floor_lookup(keys, probe):
+def _check_floor(keys, probe):
     t = RBTree()
     for k in keys:
         t.insert(k, k)
     expect = max((k for k in keys if k <= probe), default=None)
     assert t.floor(probe) == expect
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(0, 10_000), unique=True, max_size=200))
+    @settings(max_examples=60, deadline=None)
+    def test_insert_find_invariants(keys):
+        _check_insert_find(keys)
+
+    @given(st.lists(st.integers(0, 1000), unique=True, min_size=1,
+                    max_size=120),
+           st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_delete_keeps_invariants(keys, data):
+        to_del = data.draw(st.lists(st.sampled_from(keys), unique=True))
+        _check_delete(keys, to_del)
+
+    @given(st.lists(st.integers(0, 1000), unique=True, min_size=1,
+                    max_size=80),
+           st.integers(0, 1001))
+    @settings(max_examples=60, deadline=None)
+    def test_floor_lookup(keys, probe):
+        _check_floor(keys, probe)
+
+
+def _sample_keys(rng, lo, hi, max_size, min_size=0):
+    n = rng.randrange(min_size, max_size + 1)
+    return rng.sample(range(lo, hi + 1), n)
+
+
+def test_fuzz_insert_find_invariants_seeded():
+    """Seeded-``random`` fallback fuzz: randomized coverage without
+    hypothesis (not installed in the local container; CI keeps the
+    hypothesis path above)."""
+    rng = random.Random(0xB17EE)
+    for _case in range(60):
+        _check_insert_find(_sample_keys(rng, 0, 10_000, 200))
+
+
+def test_fuzz_delete_keeps_invariants_seeded():
+    rng = random.Random(0xDE1E7E)
+    for _case in range(60):
+        keys = _sample_keys(rng, 0, 1000, 120, min_size=1)
+        to_del = rng.sample(keys, rng.randrange(0, len(keys) + 1))
+        _check_delete(keys, to_del)
+
+
+def test_fuzz_floor_lookup_seeded():
+    rng = random.Random(0xF100E)
+    for _case in range(60):
+        keys = _sample_keys(rng, 0, 1000, 80, min_size=1)
+        _check_floor(keys, rng.randrange(0, 1002))

@@ -1,28 +1,19 @@
 """Sharding rules: divisibility guards, FSDP/TP assignment, batch fitting."""
 import jax
-import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
-
-# Broken since the seed against the pinned jax (AbstractMesh API drift:
-# TypeError: 'int' object is not iterable). Keep the tests running in CI
-# as expected failures so the lane stays green and a fix shows up as
-# XPASS; see CHANGES.md (PR 1).
-pytestmark = pytest.mark.xfail(
-    reason="seed-broken against pinned jax 0.4.37 AbstractMesh API",
-    strict=False)
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.launch.sharding import ShardingRules
+from repro.launch.sharding import ShardingRules, abstract_mesh
 from repro.launch import specs as SP
 from repro.models import model as M
 
 
 def mesh16x16():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_pod():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def pspec_of(tree, *path):
