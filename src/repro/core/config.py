@@ -71,10 +71,26 @@ class SwapConfig:
     (2.2)) is honoured between chunks, so ``batch_mps`` bounds how long a
     racing fault waits on an active writer. ``batch_mps <= 0`` disables
     batching entirely (scalar per-MP path, kept for A/B benchmarks).
+
+    Fault-path knobs (paper O2: P90 < 10 us passive swap-in):
+
+    * ``fast_fault_enabled`` -- zero-page ultrafast path: resolve a
+      zero-kind fault through the O(1) fault-descriptor table under the
+      req's short MP mutex only (no read-write lock round trip, no
+      condition-variable wait, constant-CRC compare). The locked scalar
+      path is kept as the A/B semantic reference.
+    * ``readahead_enabled`` -- extent readahead: the first fault into a
+      compressed extent decompresses the whole extent anyway, so
+      materialize *all* its still-swapped sibling MPs into the resident
+      MS in one pass; N future faults become zero faults and the
+      decompress cost is paid exactly once (paper §3.3/Fig 8 parallel
+      swapping, amortized).
     """
 
     batch_enabled: bool = True
     batch_mps: int = 64              # MPs per backend bulk call / cancel point
+    fast_fault_enabled: bool = True  # O(1)-descriptor zero-page fast path
+    readahead_enabled: bool = True   # materialize whole extents on first fault
     # route the batch zero-page scan through the Pallas kernel
     # (kernels/zero_detect.py) instead of numpy — the device entry point
     # for a TPU backend; interpret-mode on CPU, so numpy stays the default.
@@ -100,6 +116,10 @@ class BackendConfig:
     # per-kind/per-shard lock split for the in-memory tiers (Palladium-style
     # sharding of per-tenant state); keys hash by (gfn, mp) across shards
     lock_shards: int = 8
+    # cap on rows per batch extent: bounds the worst-case passive-fault
+    # latency (first fault into an extent decompresses the whole stream)
+    # at a small cost in cross-row compression and per-call amortization
+    extent_max_rows: int = 16
 
 
 @dataclasses.dataclass(frozen=True)

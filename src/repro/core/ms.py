@@ -44,6 +44,11 @@ K_DISK = 4
 _H_ABI, _H_GFN, _H_PFN, _H_PRESENT, _H_STATE = 0, 1, 2, 3, 4
 _HEADER_WORDS = 8
 
+# public header-word indices: the O(1) fault-descriptor table reads the
+# header straight out of the arena (int64 loads) without an MSRecord
+H_ABI, H_GFN, H_PFN, H_PRESENT, H_STATE = (
+    _H_ABI, _H_GFN, _H_PFN, _H_PRESENT, _H_STATE)
+
 _BIT_COLUMN = np.arange(64, dtype=np.uint64)
 _ONE = np.uint64(1)
 
@@ -90,6 +95,24 @@ def set_bits(bm: np.ndarray, idxs: np.ndarray, value: bool) -> None:
 def record_nbytes(cfg: TaijiConfig) -> int:
     nw = (cfg.mps_per_ms + 63) // 64
     return 8 * _HEADER_WORDS + 8 * nw * 2 + cfg.mps_per_ms + 4 * cfg.mps_per_ms
+
+
+def record_field_offsets(cfg: TaijiConfig) -> dict:
+    """Byte offsets of each persistent field inside one MS record.
+
+    The single source of truth for the record layout, shared by
+    :class:`MSRecord` (which builds views) and the fault-descriptor table
+    (which indexes the arena directly). Changing the layout is an ABI
+    break (bump ``ABI_VERSION``).
+    """
+    nw = (cfg.mps_per_ms + 63) // 64
+    header = 0
+    bm_out = 8 * _HEADER_WORDS
+    bm_in = bm_out + 8 * nw
+    kinds = bm_in + 8 * nw
+    crc = kinds + cfg.mps_per_ms
+    return {"header": header, "bm_out": bm_out, "bm_in": bm_in,
+            "kinds": kinds, "crc": crc}
 
 
 class MSRecord:

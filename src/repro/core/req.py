@@ -18,12 +18,14 @@ Four atomicity layers, reproduced 1:1:
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from .config import TaijiConfig
 from .errors import InvalidStateError
 from .mpool import Mpool
-from .ms import MSRecord
+from .ms import MSRecord, record_field_offsets
 from .rbtree import RBTree
 
 
@@ -89,7 +91,7 @@ class RWLockWriterCancel:
 class Req:
     """Per-MS swap request entity: record + lock + fine-grained MP mutex."""
 
-    __slots__ = ("gfn", "record", "rwlock", "mp_mutex", "mp_cond")
+    __slots__ = ("gfn", "record", "rwlock", "mp_mutex", "mp_cond", "fdesc")
 
     def __init__(self, gfn: int, record: MSRecord) -> None:
         self.gfn = gfn
@@ -100,11 +102,91 @@ class Req:
         # by faults waiting on an in-flight IO for the same MP (Fig 8 (3.3))
         self.mp_mutex = threading.Lock()
         self.mp_cond = threading.Condition(self.mp_mutex)
+        # plain-int arena offsets (header/bm_out/bm_in/kinds/crc), filled
+        # by FaultDescTable.register -- the fault fast path unpacks this
+        # tuple instead of chasing record attributes / numpy boxing
+        self.fdesc = None
 
     # convenience accessors used by the virtualization layer's presence probe
     def mp_present(self, mp: int) -> bool:
         r = self.record
         return not r.is_swapped_out(mp) and not r.is_swapping_in(mp)
+
+
+class FaultDescTable:
+    """Flat O(1) fault descriptors, indexed by GFN (ISSUE 3 tentpole).
+
+    The page-fault path carries the paper's 10 us P90 budget (O2), so it
+    cannot afford an rbtree walk plus ``Req``/``MSRecord`` attribute
+    chasing per fault. This table keeps, per GFN, the *arena offsets* of
+    the req's persistent record fields -- header word (state/pfn/present),
+    ``bm_out``/``bm_in`` bitmap words, backend kinds and per-MP CRCs --
+    plus typed views of the whole mpool arena to index with them. A fault
+    reads everything it needs with a couple of array loads; the red-black
+    tree remains the slow-path source of truth (and what the property
+    tests check).
+
+    The offsets live as a plain-int tuple on each :class:`Req`
+    (``fdesc``: header/bm_out/bm_in/kinds/crc indexes into the typed
+    views) so the hot path pays one list index + one tuple unpack instead
+    of five numpy scalar boxings; the ``hdr`` column is the flat per-GFN
+    validity word (also what invariant checks compare against).
+
+    Consistency: rows are published by :meth:`register` *after* the req is
+    fully constructed (``reqs[gfn]`` is the publication gate) and retired
+    by :meth:`unregister` under the ReqTree lock. All *uses* that mutate
+    record state happen under the owning req's ``mp_mutex``, exactly like
+    the locked path, so descriptor reads are never torn.
+    """
+
+    def __init__(self, cfg: TaijiConfig, arena: np.ndarray) -> None:
+        self.cfg = cfg
+        n = cfg.n_virt_ms
+        self.n = n
+        self._off = record_field_offsets(cfg)
+        # typed whole-arena views (the arena is 8-byte sized and aligned)
+        self.a8 = arena
+        self.i64 = arena.view(np.int64)
+        self.u64 = arena.view(np.uint64)
+        self.u32 = arena.view(np.uint32)
+        # hdr < 0 means "no descriptor" (set last on register, first on
+        # retire); the field offsets themselves ride on Req.fdesc
+        self.hdr = np.full(n, -1, dtype=np.int64)     # int64 index of header
+        self.reqs: List[Optional[Req]] = [None] * n
+        # slab offsets are size-class aligned (>= 32B), so the 8-byte
+        # fields always align; the uint32 CRC column only aligns when the
+        # kinds column (mps_per_ms bytes) is a multiple of 4
+        self.enabled = cfg.mps_per_ms % 4 == 0
+
+    def register(self, gfn: int, req: Req) -> None:
+        base = req.record.handle.offset
+        off = self._off
+        req.fdesc = (base >> 3, (base + off["bm_out"]) >> 3,
+                     (base + off["bm_in"]) >> 3, base + off["kinds"],
+                     (base + off["crc"]) >> 2)
+        self.hdr[gfn] = base >> 3
+        self.reqs[gfn] = req
+
+    def unregister(self, gfn: int) -> None:
+        self.reqs[gfn] = None
+        self.hdr[gfn] = -1
+
+    def quiesce(self, gfn: int) -> None:
+        """Teardown barrier: make the GFN invisible to the lock-light
+        fault fast path and wait out any in-flight fast fault.
+
+        The fast path re-validates ``hdr[gfn]`` *after* acquiring the
+        req's ``mp_mutex``, so clearing it here and then bouncing through
+        the mutex guarantees no fast fault can still be touching the
+        frame or record when the caller proceeds to unmap/free. The req
+        row stays published for slow-path parity; :meth:`unregister`
+        retires it fully.
+        """
+        req = self.reqs[gfn]
+        self.hdr[gfn] = -1
+        if req is not None:
+            req.mp_mutex.acquire()
+            req.mp_mutex.release()
 
 
 class ReqTree:
@@ -118,6 +200,9 @@ class ReqTree:
         # fast-path cache: dict lookups are O(1); the RB tree remains the
         # authoritative ordered structure (and is what property tests check)
         self._cache: Dict[int, Req] = {}
+        # O(1) fault descriptors over the mpool arena (survives hot
+        # upgrades with the tree: record handles are stable)
+        self.table = FaultDescTable(cfg, mpool.buffer)
 
     def lookup(self, gfn: int) -> Optional[Req]:
         req = self._cache.get(gfn)
@@ -138,10 +223,20 @@ class ReqTree:
                 req = Req(gfn, record)
                 self._tree.insert(gfn, req)
                 self._cache[gfn] = req
+                self.table.register(gfn, req)
             return req
+
+    def quiesce_fast_faults(self, gfn: int) -> None:
+        """See :meth:`FaultDescTable.quiesce` (called by MS teardown
+        after it holds the req's write lock). Deliberately does NOT take
+        the tree lock: the mutex bounce must not nest under it (reclaim
+        paths acquire the tree lock while holding a req mutex), and the
+        row read + validity store are GIL-atomic."""
+        self.table.quiesce(gfn)
 
     def remove(self, gfn: int) -> None:
         with self._lock:
+            self.table.unregister(gfn)
             req: Req = self._tree.delete(gfn)
             self._cache.pop(gfn, None)
             self.mpool.slab_free(req.record.handle)
@@ -158,3 +253,7 @@ class ReqTree:
             self._tree.check_invariants()
             for gfn, req in self._tree.items():
                 assert req.gfn == gfn == req.record.gfn
+                assert self.table.reqs[gfn] is req
+                assert int(self.table.hdr[gfn]) == req.record.handle.offset >> 3
+                assert req.fdesc is not None and req.fdesc[0] == \
+                    req.record.handle.offset >> 3

@@ -22,6 +22,7 @@ on the fault/allocation path (§4.2.2 end).
 from __future__ import annotations
 
 import time
+import zlib as _zlib
 from typing import List, Optional
 
 import numpy as _np
@@ -30,8 +31,10 @@ from .backend import BackendStore
 from .config import TaijiConfig
 from .errors import CorruptionError, OutOfMemoryError, PinnedError
 from .lru import MultiLevelLRU
-from .metrics import Metrics
-from .ms import K_NONE, K_ZERO, MS_PARTIAL, MS_RESIDENT, MS_SWAPPED
+from .metrics import (FK_COMPRESSED, FK_FAST, FK_OTHER, FK_READAHEAD,
+                      FK_ZERO, Metrics)
+from .ms import (H_PFN, H_PRESENT, H_STATE, K_COMPRESSED, K_DISK, K_FREE,
+                 K_NONE, K_ZERO, MS_PARTIAL, MS_RESIDENT, MS_SWAPPED)
 from .req import Req, ReqTree
 from .virt import F_PINNED, NO_PFN, VirtualizationLayer
 from .watermark import WatermarkPolicy
@@ -53,6 +56,23 @@ class SwapEngine:
         self.watermark = watermark
         self.metrics = metrics
 
+        # fault fast-path working set, hoisted out of the per-fault budget:
+        # the O(1) descriptor table, the flat physical buffer, geometry
+        # constants and the constant zero-page CRC
+        self._ft = reqs.table
+        self._buf = virt.phys.buffer
+        self._flags = virt.table.flags   # stable array, built once
+        self._ms_bytes = cfg.ms_bytes
+        self._mp_bytes = cfg.mp_bytes
+        self._mps = cfg.mps_per_ms
+        self._zero_crc = backend.zero_crc
+        self._crc_on = cfg.backend.crc_enabled
+        self._fast = cfg.swap.fast_fault_enabled and reqs.table.enabled
+        self._readahead = cfg.swap.readahead_enabled
+        # deferred fast-path counters ride the ring flush; tell it whether
+        # each fast fault performed a CRC compare
+        metrics.fault_ring.count_crc = self._crc_on
+
         # install ourselves as the virtualization layer's fault handler and
         # per-MP presence probe (EPT-violation exit -> Fault_in)
         virt.fault_handler = self.fault_in
@@ -60,32 +80,130 @@ class SwapEngine:
 
     # ------------------------------------------------------------ presence
     def _mp_present(self, gfn: int, mp: int) -> bool:
-        req = self.reqs.lookup(gfn)
+        req = self._ft.reqs[gfn]
         if req is None:
             return True
         return req.mp_present(mp)
 
     # ========================================================== Fault_in ==
     def fault_in(self, gfn: int, mp: int) -> None:
-        """Passive swap-in of one MP; parallel across MPs and MSs."""
-        t0 = _perf_ns()
-        self.metrics.faults += 1
-        if int(self.virt.table.flags[gfn]) & F_PINNED:   # lock-free read
-            # fault on a registered DMA range: intercepted DMAR exception
-            self.metrics.dmar_intercepts += 1
+        """Passive swap-in of one MP; parallel across MPs and MSs.
 
-        req = self.reqs.lookup(gfn)
+        Zero-page ultrafast path (the production-dominant 76.79% case,
+        Fig 15c): descriptor-table loads + memset + constant-CRC compare +
+        in-word bitmap clear under the req's short ``mp_mutex`` only. No
+        rbtree walk, no read-write-lock round trip, no condition-variable
+        wait, no per-fault zlib call, and the latency sample is one ring
+        store. First faults into a fully swapped MS allocate their slot
+        inline (exactly-once, same mutex the locked path allocates
+        under). Safe without the rwlock because every writer mutation of
+        record state happens inside the same ``mp_mutex`` critical
+        sections (Fig 8 (3.3)/(4.1)); a fault that cannot take this exit
+        (non-zero kind, in-flight IO) falls back to the locked scalar
+        path, which still cancels active writers (2.2).
+        """
+        t0 = _perf_ns()
+        m = self.metrics
+        m.faults += 1
+        if self._flags[gfn] & F_PINNED:   # lock-free read
+            # fault on a registered DMA range: intercepted DMAR exception
+            m.dmar_intercepts += 1
+        req = self._ft.reqs[gfn]
         if req is None:
             raise OutOfMemoryError(f"fault on unmanaged swapped gfn {gfn}")
 
-        req.rwlock.acquire_read()          # cancels any active writer (2.2)
+        if self._fast:
+            ft = self._ft
+            hdr, bmo, bmi, kio, cro = req.fdesc
+            w = mp >> 6
+            bit = 1 << (mp & 63)
+            u64 = ft.u64
+            i64 = ft.i64
+            done = 0
+            pfn = -1
+            lock = req.mp_mutex
+            lock.acquire()
+            try:
+                ow = 0
+                # validity re-check under the mutex: hdr=-1 means
+                # teardown quiesced the GFN, and the row must still hold
+                # OUR req -- a free+realloc can re-arm the gate for a new
+                # req (even at the same slab base) while we hold the old
+                # one's mutex (ABA)
+                if ft.reqs[gfn] is req and ft.hdr[gfn] >= 0:
+                    ow = int(u64[bmo + w])
+                    if not ow & bit:
+                        done = 2            # another fault already resolved it
+                    elif (ft.a8[kio + mp] == K_ZERO
+                          and not int(u64[bmi + w]) & bit):
+                        # pfn >= 0 here means MS_PARTIAL: with bm_out set
+                        # the state cannot be RESIDENT, and SWAPPED
+                        # implies pfn=-1
+                        pfn = int(i64[hdr + H_PFN])
+                        if pfn < 0 and i64[hdr + H_STATE] == MS_SWAPPED \
+                                and not self.watermark.is_critical(
+                                    self.virt.free_ms):
+                            # exactly-once first-in alloc (Fig 8 state).
+                            # Only the leaf-locked slot pop is allowed
+                            # here: the critical/exhausted case must
+                            # reclaim through the slow path, whose rwlock
+                            # read grant is what lets a concurrent
+                            # reclaimer's non-blocking write acquisition
+                            # skip this MS (holding mp_mutex while waiting
+                            # on another req's mutex could cycle)
+                            slot = self.virt.phys.try_alloc_slot()
+                            if slot is not None:
+                                pfn = slot
+                                req.record.on_first_swap_in(pfn)
+                                self.virt.table.map_split(gfn, pfn)
+                                self.lru.note_swapped_in(gfn)
+                if pfn >= 0:
+                    o = pfn * self._ms_bytes + mp * self._mp_bytes
+                    self._buf[o : o + self._mp_bytes] = 0
+                    if self._crc_on and ft.u32[cro + mp] != self._zero_crc:
+                        m.crc_checks += 1
+                        m.crc_failures += 1
+                        raise CorruptionError(
+                            f"zero-page CRC mismatch gfn={gfn} mp={mp}")
+                    u64[bmo + w] = ow & ~bit & _MASK64
+                    ft.a8[kio + mp] = K_NONE
+                    pc = int(i64[hdr + H_PRESENT]) + 1
+                    i64[hdr + H_PRESENT] = pc
+                    # fault_zero_pages / fault_fast_path / crc_checks are
+                    # deferred to the ring flush (FK_FAST tag); the
+                    # exactly-once witness stays immediate
+                    m.mp_swapped_in += 1
+                    if pc == self._mps:     # last MP: merge (7)
+                        # merge only when the bitmaps agree: an active
+                        # writer's in-flight chunk is still counted in
+                        # present_count (its decrement is deferred to
+                        # chunk publish), so pc can transiently read
+                        # mps_per_ms while chunk MPs sit latched -- the
+                        # true last fault after the publish merges
+                        rec = req.record
+                        if not (rec.bm_out.any() or rec.bm_in.any()):
+                            rec.on_last_swap_in()
+                            self.virt.table.merge(gfn, pfn)
+                            m.ms_swapped_in += 1
+                            req.mp_cond.notify_all()
+                    done = 1
+            finally:
+                lock.release()
+            if done:
+                m.fault_ring.push(_perf_ns() - t0,
+                                  FK_ZERO | FK_FAST if done == 1 else FK_OTHER)
+                return
+
+        # slow path: locked scalar reference (cancels any active writer, 2.2)
+        req.rwlock.acquire_read()
         try:
-            self._fault_in_locked(req, gfn, mp)
+            fk = self._fault_in_locked(req, gfn, mp)
         finally:
             req.rwlock.release_read()
-        self.metrics.fault_latency.record(_perf_ns() - t0)
+        m.fault_ring.push(_perf_ns() - t0, fk)
 
-    def _fault_in_locked(self, req: Req, gfn: int, mp: int) -> None:
+    def _fault_in_locked(self, req: Req, gfn: int, mp: int) -> int:
+        """Locked scalar fault path. Returns the fault-kind code (FK_*)."""
         rec = req.record
         # inlined bitmap ops: the fault path carries the 10us-P90 budget
         # (O2), so word read-modify-writes act directly on the arena words
@@ -97,7 +215,7 @@ class SwapEngine:
             while int(rec.bm_in[w]) & bit:
                 req.mp_cond.wait()
             if not int(rec.bm_out[w]) & bit:
-                return                      # another fault already resolved it
+                return FK_OTHER             # another fault already resolved it
             first_in = rec.state == MS_SWAPPED
             if first_in:
                 pfn = self._alloc_slot_critical()
@@ -132,9 +250,20 @@ class SwapEngine:
                     self.virt.table.merge(gfn, rec.pfn)       # (7)
                     self.metrics.ms_swapped_in += 1
                 req.mp_cond.notify_all()
-                return
+                return FK_ZERO
 
             rec.bm_in[w] = _U64(int(rec.bm_in[w]) | bit)
+            ra = None
+            if self._readahead and kind == K_COMPRESSED:
+                # extent readahead (paper §3.3/Fig 8 parallel swapping):
+                # the first fault into a compressed extent decompresses
+                # the whole stream anyway -- claim every still-swapped
+                # sibling MP (bm_in latch, exactly-once) so one pass
+                # materializes them all and N future faults never happen
+                ra = self._claim_extent_readahead(rec, gfn, mp)
+
+        if ra is not None:
+            return self._readahead_fill(req, gfn, mp, crc, pfn, ra)
 
         # backend IO outside the mutex (readers of other MPs stay parallel)
         ok = False
@@ -154,6 +283,156 @@ class SwapEngine:
                         self.virt.table.merge(gfn, rec.pfn)   # (7)
                         self.metrics.ms_swapped_in += 1
                 req.mp_cond.notify_all()
+        if kind == K_COMPRESSED:
+            return FK_COMPRESSED
+        return FK_ZERO if kind == K_FREE else FK_OTHER
+
+    # ------------------------------------------------------ extent readahead
+    def _claim_extent_readahead(self, rec, gfn: int, mp: int):
+        """Claim the faulting extent's still-swapped sibling MPs.
+
+        Called under ``mp_cond``. Returns ``(eid, my_row, idxs, rows,
+        crcs)`` with ``idxs`` the claimed sibling MP index vector (bm_in
+        latched here) and ``rows`` their extent rows, or ``None`` when the
+        entry is a standalone blob. Only siblings whose live backend entry
+        still references this extent are eligible (a consumed-then-re-
+        swapped MP may appear in the stored member list with stale rows).
+        """
+        probe = self.backend.extent_members(gfn, mp)
+        if probe is None:
+            return None
+        eid, my_row, live = probe
+        # pure-int word math: numpy scatter ufuncs (np.bitwise_or.at) cost
+        # tens of us per call on the target box, so eligibility and the
+        # bm_in latch are computed on Python ints over the few (<= 8)
+        # bitmap words and stored back one word at a time
+        bm_out, bm_in = rec.bm_out, rec.bm_in
+        nw = len(bm_out)
+        ow = [int(x) for x in bm_out]
+        iw = [int(x) for x in bm_in]
+        claim: List[tuple] = []
+        cw = [0] * nw                           # claimed-bit mask per word
+        for mpj, row in live:
+            if mpj == mp:
+                continue
+            wj = mpj >> 6
+            b = 1 << (mpj & 63)
+            if ow[wj] & b and not iw[wj] & b:
+                claim.append((mpj, row))
+                cw[wj] |= b
+        if not claim:
+            return eid, my_row, None, None
+        for wj in range(nw):
+            if cw[wj]:
+                bm_in[wj] = _U64(iw[wj] | cw[wj])    # IO latch (Fig 8 3.3)
+        return eid, my_row, claim, cw
+
+    def _readahead_fill(self, req: Req, gfn: int, mp: int, crc: int,
+                        pfn: int, ra) -> int:
+        """Materialize the faulting MP and its claimed extent siblings.
+
+        One decompress, one scatter into the resident MS frame. CRCs are
+        verified per row before any backend entry is consumed. Readahead
+        must not change observable semantics: a corrupt *sibling* row is
+        simply left swapped out (it keeps failing detectably when it is
+        actually faulted) while the good rows publish; only a corrupt
+        *faulting* row raises.
+        """
+        eid, my_row, claim, cw = ra
+        rec = req.record
+        m = self.metrics
+        mb = self._mp_bytes
+        n_extra = 0 if claim is None else len(claim)
+        my_ok = False
+        good: List[int] = []
+        try:
+            # one decompress + ONE whole-extent CRC (per-row crc32 calls
+            # cost more than the check is worth; the record CRCs remain
+            # the scalar path's per-row guarantee)
+            raw, crc_ok = self.backend.extent_payload(
+                gfn, eid, verify=self._crc_on)
+            arr = _np.frombuffer(raw, dtype=_np.uint8)
+            frame = self.virt.phys.ms_view(pfn)
+            # (mp, row) pairs ascend together (extents store ascending MP
+            # order), so the scatter collapses into a few contiguous-run
+            # slice copies instead of one fancy-index gather per call
+            pairs = sorted(([] if claim is None else claim) + [(mp, my_row)])
+            start = 0
+            while start < len(pairs):
+                end = start + 1
+                while (end < len(pairs)
+                       and pairs[end][0] == pairs[end - 1][0] + 1
+                       and pairs[end][1] == pairs[end - 1][1] + 1):
+                    end += 1
+                mp0, r0 = pairs[start]
+                cnt = end - start
+                frame[mp0 * mb:(mp0 + cnt) * mb] = \
+                    arr[r0 * mb:(r0 + cnt) * mb]
+                start = end
+            if not self._crc_on:
+                my_ok = True
+                good = [p[0] for p in pairs if p[0] != mp]
+            elif crc_ok:
+                m.crc_checks += 1 + n_extra
+                my_ok = True
+                good = [p[0] for p in pairs if p[0] != mp]
+            else:
+                # whole-extent CRC failed: salvage row by row against the
+                # record CRCs -- corrupt siblings stay swapped out (they
+                # keep failing detectably when actually faulted)
+                m.crc_checks += 1 + n_extra
+                for mpj, rowj in pairs:
+                    want = crc if mpj == mp else int(rec.crc[mpj])
+                    row_ok = _zlib.crc32(
+                        frame[mpj * mb:(mpj + 1) * mb]) == want
+                    if not row_ok:
+                        m.crc_failures += 1
+                    elif mpj == mp:
+                        my_ok = True
+                    else:
+                        good.append(mpj)
+            consumed = ([mp] if my_ok else []) + good
+            if consumed:
+                self.backend.consume_extent_rows(gfn, eid, consumed)
+        finally:
+            with req.mp_cond:
+                # release every latch (ours + claimed) and publish the
+                # verified rows, all with per-word int stores
+                nw = len(rec.bm_in)
+                rel = list(cw) if claim is not None else [0] * nw
+                rel[mp >> 6] |= 1 << (mp & 63)
+                bm_in = rec.bm_in
+                for wj in range(nw):
+                    if rel[wj]:
+                        bm_in[wj] = _U64(int(bm_in[wj]) & ~rel[wj] & _MASK64)
+                publish = ([mp] if my_ok else []) + good
+                if publish:
+                    pw = [0] * nw
+                    kinds = rec.kinds
+                    for mpj in publish:
+                        pw[mpj >> 6] |= 1 << (mpj & 63)
+                        kinds[mpj] = K_NONE
+                    bm_out = rec.bm_out
+                    for wj in range(nw):
+                        if pw[wj]:
+                            bm_out[wj] = _U64(
+                                int(bm_out[wj]) & ~pw[wj] & _MASK64)
+                    rec.present_count += len(publish)
+                    m.mp_swapped_in += len(publish)
+                    if my_ok:
+                        m.fault_compressed_pages += 1
+                    if good:
+                        m.readahead_extents += 1
+                        m.fault_readahead_mps += len(good)
+                    if rec.present_count == self.cfg.mps_per_ms:
+                        rec.on_last_swap_in()
+                        self.virt.table.merge(gfn, rec.pfn)   # (7)
+                        m.ms_swapped_in += 1
+                req.mp_cond.notify_all()
+        if not my_ok:
+            raise CorruptionError(
+                f"CRC mismatch gfn={gfn} mp={mp} (extent {eid})")
+        return FK_READAHEAD if good else FK_COMPRESSED
 
     # ========================================================== Swap_out ==
     def swap_out_ms(self, gfn: int, *, blocking_lock: bool = True,
@@ -341,6 +620,14 @@ class SwapEngine:
                 break
             idxs = todo[lo:lo + chunk]
             with req.mp_cond:
+                # re-filter under the mutex: the zero-page fast path does
+                # not take the rwlock, so an MP from the once-scanned todo
+                # list may have been fault-resolved between chunks
+                idxs = idxs[[rec.is_swapped_out(int(i))
+                             and not rec.is_swapping_in(int(i))
+                             for i in idxs]]
+                if len(idxs) == 0:
+                    continue
                 if rec.state == MS_SWAPPED:
                     pfn = self._alloc_slot_critical()
                     rec.on_first_swap_in(pfn)     # exactly-once alloc

@@ -69,6 +69,10 @@ class TaijiSystem:
         self.lru.untrack(gfn)
         req = self.reqs.lookup(gfn)
         grant = req.rwlock.acquire_write() if req is not None else None
+        # the write lock quiesces locked faults and writers; the zero-page
+        # fast path never takes it, so additionally invalidate the fault
+        # descriptor and bounce through the MP mutex before teardown
+        self.reqs.quiesce_fast_faults(gfn)
         try:
             pfn = int(self.virt.table.pfn[gfn])
             if req is not None:
@@ -165,6 +169,7 @@ class TaijiSystem:
         across replays of the same seeded trace); ``latency`` carries the
         timing-dependent percentiles separately.
         """
+        self.metrics.sync()              # fold pending latency-ring samples
         free = self.phys.free_count
         return {
             "deterministic": {

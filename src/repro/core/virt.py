@@ -219,6 +219,10 @@ class VirtualizationLayer:
         self.table = BlockTable(cfg, mpool)
         # fault handler is installed by the swap engine; None -> faults raise
         self.fault_handler = None
+        # per-MP presence probe, also installed by the engine (reads the
+        # O(1) fault-descriptor table); a plain attribute so the hot
+        # translate path pays one load instead of a getattr with default
+        self.mp_present_probe = None
 
         # pin + identity-map the mpool arena (GPA == HPA contract)
         for gfn in range(cfg.mpool_reserve_ms):
@@ -240,7 +244,7 @@ class VirtualizationLayer:
         if int(self.table.flags[gfn]) & F_SPLIT:
             # per-MP presence is tracked by the req; the engine installs a
             # presence probe so translation can consult it.
-            probe = getattr(self, "mp_present_probe", None)
+            probe = self.mp_present_probe
             if probe is not None and not probe(gfn, mp):
                 raise EPTFault(gfn, mp)
         return gfn, mp, inner, pfn

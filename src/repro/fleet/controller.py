@@ -238,6 +238,7 @@ class FleetController:
     def _fleet_fault_hist(self) -> LatencyHistogram:
         agg = LatencyHistogram()
         for n in self.nodes:
+            # the fault_latency property folds pending ring samples itself
             agg.merge(n.system.metrics.fault_latency)
         return agg
 

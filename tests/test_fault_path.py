@@ -1,0 +1,509 @@
+"""Microsecond fault path (ISSUE 3): O(1) descriptors, zero-page fast
+path, extent readahead, latency ring, backend accounting.
+
+The fast path must be *observationally identical* to the locked scalar
+reference path (``SwapConfig(fast_fault_enabled=False,
+readahead_enabled=False)``): same bytes, same record state, same
+exactly-once guarantees under racing writers.
+"""
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.config import SwapConfig, small_test_config
+from repro.core.errors import CorruptionError
+from repro.core.metrics import (FK_COMPRESSED, FK_FAST, FK_ZERO,
+                                LatencyHistogram, LatencyRing, Metrics)
+from repro.core.ms import (K_COMPRESSED, K_NONE, K_ZERO, MS_PARTIAL,
+                           MS_RESIDENT, MS_SWAPPED)
+from repro.core.system import TaijiSystem
+
+SCALAR = SwapConfig(fast_fault_enabled=False, readahead_enabled=False)
+
+
+def fresh(**kw):
+    return TaijiSystem(small_test_config(**kw))
+
+
+def mixed_ms(cfg, seed):
+    """Zero / compressible / incompressible MP mix in one MS."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for mp in range(cfg.mps_per_ms):
+        r = mp % 3
+        if r == 0:
+            rows.append(np.zeros(cfg.mp_bytes, np.uint8))
+        elif r == 1:
+            rows.append(np.full(cfg.mp_bytes, mp & 0xFF, np.uint8))
+        else:
+            rows.append(rng.integers(0, 256, cfg.mp_bytes).astype(np.uint8))
+    return np.concatenate(rows).tobytes()
+
+
+# ------------------------------------------------------- descriptor table
+def test_descriptor_table_registered_and_consistent():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    s.write(s.ms_addr(g), mixed_ms(s.cfg, 1))
+    s.engine.swap_out_ms(g)
+    ft = s.reqs.table
+    req = s.reqs.lookup(g)
+    assert ft.reqs[g] is req
+    assert req.fdesc is not None
+    hdr, bmo, bmi, kio, cro = req.fdesc
+    # descriptor loads must agree with the MSRecord views
+    rec = req.record
+    assert int(ft.i64[hdr + 4]) == rec.state
+    assert int(ft.i64[hdr + 2]) == rec.pfn
+    assert int(ft.u64[bmo]) == int(rec.bm_out[0])
+    assert int(ft.u64[bmi]) == int(rec.bm_in[0])
+    assert int(ft.a8[kio]) == int(rec.kinds[0])
+    assert int(ft.u32[cro]) == int(rec.crc[0])
+    s.reqs.check_invariants()
+    s.close()
+
+
+def test_descriptor_unregistered_on_free():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    s.write(s.ms_addr(g), mixed_ms(s.cfg, 2))
+    s.engine.swap_out_ms(g)
+    s.read(s.ms_addr(g), s.cfg.ms_bytes)           # fault everything back
+    s.guest_free_ms(g)
+    assert s.reqs.table.reqs[g] is None
+    assert int(s.reqs.table.hdr[g]) == -1
+    s.close()
+
+
+# ------------------------------------------------------ zero-page fast path
+def test_zero_fast_path_resolves_and_counts():
+    s = fresh()
+    g = s.guest_alloc_ms()                          # zero-filled
+    s.engine.swap_out_ms(g)
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
+    s.metrics.sync()
+    assert s.metrics.fault_fast_path == s.cfg.mps_per_ms
+    assert s.metrics.fault_zero_pages == s.cfg.mps_per_ms
+    rec = s.reqs.lookup(g).record
+    assert rec.state == MS_RESIDENT
+    assert rec.present_count == s.cfg.mps_per_ms
+    assert np.all(rec.kinds == K_NONE)
+    s.close()
+
+
+def test_fast_path_first_in_allocates_exactly_once():
+    """Concurrent first faults into a fully swapped MS: one slot alloc."""
+    s = fresh()
+    g = s.guest_alloc_ms()
+    s.engine.swap_out_ms(g)
+    assert s.reqs.lookup(g).record.state == MS_SWAPPED
+    free_before = s.phys.free_count
+    errs = []
+
+    def reader(mp):
+        try:
+            got = s.read(s.ms_addr(g, mp=mp), s.cfg.mp_bytes)
+            assert got == bytes(s.cfg.mp_bytes)
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=reader, args=(mp % s.cfg.mps_per_ms,))
+               for mp in range(3 * s.cfg.mps_per_ms)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert free_before - s.phys.free_count == 1     # exactly-once alloc
+    assert s.metrics.ms_swapped_in == 1
+    s.metrics.sync()
+    assert s.metrics.mp_swapped_in == s.cfg.mps_per_ms
+    assert s.reqs.lookup(g).record.state == MS_RESIDENT
+    s.close()
+
+
+def test_fast_vs_scalar_reference_equivalence():
+    """Byte- and state-identical MS after faulting through either path."""
+    data = None
+    finals = {}
+    for swap_cfg in (None, SCALAR):
+        s = fresh(**({} if swap_cfg is None else {"swap": swap_cfg}))
+        g = s.guest_alloc_ms()
+        data = data or mixed_ms(s.cfg, 11)
+        s.write(s.ms_addr(g), data)
+        s.engine.swap_out_ms(g)
+        # touch MPs one at a time through the guest read path
+        got = b"".join(
+            s.read(s.ms_addr(g, mp=mp), s.cfg.mp_bytes)
+            for mp in range(s.cfg.mps_per_ms))
+        rec = s.reqs.lookup(g).record
+        finals[swap_cfg is None] = (got, rec.state, rec.present_count,
+                                    rec.kinds.copy(), rec.bm_out.copy())
+        s.close()
+    fast, scalar = finals[True], finals[False]
+    assert fast[0] == scalar[0] == data
+    assert fast[1] == scalar[1] == MS_RESIDENT
+    assert fast[2] == scalar[2]
+    assert np.array_equal(fast[3], scalar[3])
+    assert np.array_equal(fast[4], scalar[4])
+
+
+def test_fast_path_detects_crc_corruption():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    s.engine.swap_out_ms(g)
+    rec = s.reqs.lookup(g).record
+    rec.crc[3] = 0xDEADBEEF                         # corrupt the record CRC
+    with pytest.raises(CorruptionError):
+        s.read(s.ms_addr(g, mp=3), 16)
+    assert s.metrics.crc_failures >= 1
+    s.close()
+
+
+def test_fault_vs_swap_out_race_on_descriptor_table():
+    """Racing zero faults against a slow batched writer: the MS converges
+    to a consistent state and every byte reads back."""
+    s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=2))
+    g = s.guest_alloc_ms()
+    data = mixed_ms(s.cfg, 21)
+    s.write(s.ms_addr(g), data)
+
+    orig = s.backend.store_batch
+    started = threading.Event()
+
+    def slow_store_batch(gfn, mps, d):
+        started.set()
+        time.sleep(0.002)
+        return orig(gfn, mps, d)
+
+    s.backend.store_batch = slow_store_batch
+    done = threading.Event()
+
+    def writer():
+        s.engine.swap_out_ms(g, batched=True)
+        done.set()
+
+    w = threading.Thread(target=writer)
+    w.start()
+    started.wait(5)
+    # faults land mid-swap-out: zero MPs take the descriptor fast path,
+    # compressed MPs cancel the writer through the locked path
+    for mp in range(s.cfg.mps_per_ms):
+        off = mp * s.cfg.mp_bytes
+        assert s.read(s.ms_addr(g) + off, s.cfg.mp_bytes) == \
+            data[off:off + s.cfg.mp_bytes]
+    w.join(5)
+    assert done.is_set()
+    rec = s.reqs.lookup(g).record
+    assert np.all(rec.bm_in == 0)
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert rec.state == MS_RESIDENT
+    assert rec.present_count == s.cfg.mps_per_ms
+    s.reqs.check_invariants()
+    s.close()
+
+
+def test_fast_faults_during_swap_out_do_not_merge_prematurely():
+    """present_count transiently double-counts a writer's in-flight chunk;
+    fast faults re-resolving published zero MPs must not merge the MS
+    while chunk MPs are still latched."""
+    s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=2))
+    g = s.guest_alloc_ms()                          # all-zero MS
+    orig = s.backend.store_batch
+
+    def racing_store_batch(gfn, mps, data):
+        kinds, crcs = orig(gfn, mps, data)
+        rec = s.reqs.lookup(g).record
+        in_chunk = {int(x) for x in mps}
+        # a racing guest fast-faults every already-published zero MP
+        # while this chunk is still latched (bm_in set, present_count
+        # not yet decremented)
+        for mp in range(s.cfg.mps_per_ms):
+            if mp not in in_chunk and rec.is_swapped_out(mp) \
+                    and not rec.is_swapping_in(mp):
+                s.engine.fault_in(g, mp)
+        return kinds, crcs
+
+    s.backend.store_batch = racing_store_batch
+    s.engine.swap_out_ms(g, batched=True)
+    rec = s.reqs.lookup(g).record
+    # never RESIDENT while record bits still say swapped/latched
+    assert not (rec.state == MS_RESIDENT
+                and (rec.bm_out.any() or rec.bm_in.any()))
+    assert np.all(rec.bm_in == 0)
+    # the remaining MPs fault back in cleanly and the MS converges
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
+    assert rec.state == MS_RESIDENT
+    assert rec.present_count == s.cfg.mps_per_ms
+    assert not rec.bm_out.any()
+    s.reqs.check_invariants()
+    s.close()
+
+
+def test_quiesce_diverts_fast_path_to_locked_path():
+    """After the teardown barrier, faults must take the slow path (which
+    serializes on the freeer's write lock) instead of the lock-light exit."""
+    s = fresh()
+    g = s.guest_alloc_ms()                          # zero-filled
+    s.engine.swap_out_ms(g)
+    s.reqs.quiesce_fast_faults(g)
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
+    s.metrics.sync()
+    assert s.metrics.fault_fast_path == 0           # all via the locked path
+    assert s.metrics.fault_zero_pages == s.cfg.mps_per_ms
+    s.close()
+
+
+def test_fast_fault_during_batched_prefetch_chunks():
+    """A zero fast fault resolving an MP between prefetch chunks must not
+    make the batched swap-in reload it (stale todo list)."""
+    s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=2))
+    g = s.guest_alloc_ms()
+    data = mixed_ms(s.cfg, 41)
+    s.write(s.ms_addr(g), data)
+    s.engine.swap_out_ms(g)
+    rec = s.reqs.lookup(g).record
+    # a zero MP that lands in a later chunk than the first
+    zero_mp = max(mp for mp in range(s.cfg.mps_per_ms)
+                  if rec.kinds[mp] == K_ZERO)
+    orig = s.backend.load_batch
+    fired = []
+
+    def load_batch_with_racing_fault(gfn, mps, kinds, crcs, out):
+        if not fired and zero_mp not in [int(x) for x in mps]:
+            fired.append(True)
+            # simulate a concurrent guest fault winning between chunks
+            s.engine.fault_in(g, zero_mp)
+        return orig(gfn, mps, kinds, crcs, out)
+
+    s.backend.load_batch = load_batch_with_racing_fault
+    s.engine.swap_in_ms(g, batched=True)      # must not raise
+    assert fired
+    s.metrics.sync()
+    assert rec.state == MS_RESIDENT
+    assert rec.present_count == s.cfg.mps_per_ms
+    assert s.metrics.mp_swapped_in == s.cfg.mps_per_ms   # exactly once
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    s.close()
+
+
+# ----------------------------------------------------------- extent readahead
+def test_readahead_materializes_whole_extent():
+    s = fresh()
+    g = s.guest_alloc_ms()
+    data = bytes(np.full(s.cfg.ms_bytes, 0xAB, np.uint8))   # all compressible
+    s.write(s.ms_addr(g), data)
+    s.engine.swap_out_ms(g, batched=True)
+    faults_before = s.metrics.faults
+    # one fault into the extent materializes every sibling row
+    assert s.read(s.ms_addr(g, mp=2), s.cfg.mp_bytes) == \
+        data[2 * s.cfg.mp_bytes:3 * s.cfg.mp_bytes]
+    assert s.metrics.faults == faults_before + 1
+    assert s.metrics.readahead_extents == 1
+    assert s.metrics.fault_readahead_mps == s.cfg.mps_per_ms - 1
+    rec = s.reqs.lookup(g).record
+    assert rec.state == MS_RESIDENT
+    assert rec.present_count == s.cfg.mps_per_ms
+    assert not s.backend._extents                    # fully consumed
+    # no further faults: everything is already resident
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.metrics.faults == faults_before + 1
+    s.close()
+
+
+def test_readahead_respects_in_flight_and_resident_sibling():
+    """A sibling already resident must not be re-materialized."""
+    s = fresh(swap=SwapConfig(readahead_enabled=False))
+    g = s.guest_alloc_ms()
+    data = bytes(np.full(s.cfg.ms_bytes, 0x3C, np.uint8))
+    s.write(s.ms_addr(g), data)
+    s.engine.swap_out_ms(g, batched=True)
+    # scalar-fault one row first (readahead off), then re-enable
+    assert s.read(s.ms_addr(g, mp=0), s.cfg.mp_bytes) == \
+        data[:s.cfg.mp_bytes]
+    s.engine._readahead = True
+    overwrite = b"\x55" * 8
+    s.write(s.ms_addr(g, mp=0), overwrite)           # dirty the resident MP
+    assert s.read(s.ms_addr(g, mp=3), s.cfg.mp_bytes) == \
+        data[3 * s.cfg.mp_bytes:4 * s.cfg.mp_bytes]
+    # readahead materialized the swapped rows but left MP 0's new bytes
+    assert s.read(s.ms_addr(g, mp=0), 8) == overwrite
+    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == \
+        overwrite + data[8:]
+    s.close()
+
+
+def test_readahead_bytes_identical_vs_scalar_path():
+    data = None
+    got = {}
+    for readahead in (False, True):
+        s = fresh(swap=SwapConfig(fast_fault_enabled=True,
+                                  readahead_enabled=readahead))
+        g = s.guest_alloc_ms()
+        data = data or mixed_ms(s.cfg, 31)
+        s.write(s.ms_addr(g), data)
+        s.engine.swap_out_ms(g, batched=True)
+        # drive through single-MP faults in a scattered order
+        order = [5, 1, 7, 3, 0, 6, 2, 4][:s.cfg.mps_per_ms]
+        for mp in order:
+            s.read(s.ms_addr(g, mp=mp), 8)
+        got[readahead] = s.read(s.ms_addr(g), s.cfg.ms_bytes)
+        rec = s.reqs.lookup(g).record
+        assert rec.state == MS_RESIDENT
+        assert np.all(rec.kinds == K_NONE)
+        s.close()
+    assert got[False] == got[True] == data
+
+
+def test_readahead_corrupt_sibling_does_not_poison_fault():
+    """A corrupt sibling row stays swapped out and keeps failing; the
+    triggering fault itself succeeds."""
+    s = fresh()
+    g = s.guest_alloc_ms()
+    data = bytes(np.full(s.cfg.ms_bytes, 0x5C, np.uint8))
+    s.write(s.ms_addr(g), data)
+    s.engine.swap_out_ms(g, batched=True)
+    rec = s.reqs.lookup(g).record
+    bad_mp = 4
+    rec.crc[bad_mp] = 0xDEADBEEF            # sibling's record CRC corrupted
+    # force the per-row salvage path: whole-extent CRC must fail too
+    key = next(iter(s.backend._extents))
+    s.backend._extents[key].crc ^= 1
+    good_mp = 1
+    assert s.read(s.ms_addr(g, mp=good_mp), s.cfg.mp_bytes) == \
+        data[good_mp * s.cfg.mp_bytes:(good_mp + 1) * s.cfg.mp_bytes]
+    assert s.metrics.crc_failures >= 1
+    assert rec.is_swapped_out(bad_mp)       # left swapped, still detectable
+    with pytest.raises(CorruptionError):
+        s.read(s.ms_addr(g, mp=bad_mp), 8)
+    s.close()
+
+
+def test_corrupt_mp_keeps_failing_on_retry():
+    """load() verifies before consuming: a corrupt MP raises
+    CorruptionError on every attempt instead of KeyError on the second."""
+    s = fresh(swap=SCALAR)
+    g = s.guest_alloc_ms()
+    rng = np.random.default_rng(17)
+    data = rng.integers(0, 256, s.cfg.ms_bytes).astype(np.uint8).tobytes()
+    s.write(s.ms_addr(g), data)
+    s.engine.swap_out_ms(g, batched=False)    # standalone per-MP blobs
+    key, entry = next((k, e) for k, e in s.backend._compressed.items()
+                      if e[0] == "v")
+    blob = bytearray(entry[1])
+    blob[0] ^= 0xFF
+    s.backend._compressed[key] = ("v", bytes(blob))
+    mp = key[1]
+    for _attempt in range(2):
+        with pytest.raises(CorruptionError):
+            s.read(s.ms_addr(g, mp=mp), 8)
+    assert s.metrics.crc_failures >= 2
+    s.close()
+
+
+# --------------------------------------------------------- backend satellites
+def test_drop_decrements_backend_accounting():
+    s = fresh()
+    cfg = s.cfg
+    b = s.backend
+    rng = np.random.default_rng(3)
+    k = 6
+    data = np.zeros((k, cfg.mp_bytes), np.uint8)
+    data[0] = 0                                       # zero row
+    data[1] = 0x77                                    # compressible
+    data[2] = 0x77
+    data[3] = rng.integers(0, 256, cfg.mp_bytes)      # incompressible rows
+    data[4] = rng.integers(0, 256, cfg.mp_bytes)
+    data[5] = 0x77
+    mps = np.arange(k)
+    kinds, _ = b.store_batch(500, mps, data)
+    assert s.metrics.backend_raw_bytes > 0
+    assert s.metrics.backend_stored_bytes > 0
+    for i in range(k):
+        b.drop(500, int(mps[i]), int(kinds[i]))
+    assert s.metrics.backend_raw_bytes == 0
+    assert s.metrics.backend_stored_bytes == 0
+    assert b.stored_bytes() == 0
+    assert not b._extents
+    # scalar-store entries account symmetrically
+    kind, _crc = b.store(501, 0, data[3])
+    assert kind == K_COMPRESSED                       # stored verbatim
+    b.drop(501, 0, kind)
+    assert s.metrics.backend_raw_bytes == 0
+    assert s.metrics.backend_stored_bytes == 0
+    s.close()
+
+
+def test_backend_entries_tagged_explicitly():
+    """No more ``len(blob)`` sniffing: every entry carries its subcode."""
+    s = fresh()
+    cfg = s.cfg
+    rng = np.random.default_rng(9)
+    b = s.backend
+    compressible = np.full(cfg.mp_bytes, 0x11, np.uint8)
+    incompressible = rng.integers(0, 256, cfg.mp_bytes).astype(np.uint8)
+    b.store(600, 0, compressible)
+    b.store(600, 1, incompressible)
+    assert b._compressed[(600, 0)][0] == "z"
+    assert b._compressed[(600, 1)][0] == "v"
+    # round-trips are exact for both representations
+    out = np.empty(cfg.mp_bytes, np.uint8)
+    b.load(600, 0, K_COMPRESSED, zlib.crc32(compressible), out)
+    assert bytes(out) == compressible.tobytes()
+    b.load(600, 1, K_COMPRESSED, zlib.crc32(incompressible), out)
+    assert bytes(out) == incompressible.tobytes()
+    # batch extents are tagged references
+    data = np.full((4, cfg.mp_bytes), 0x22, np.uint8)
+    b.store_batch(601, np.arange(4), data)
+    assert all(b._compressed[(601, mp)][0] == "x" for mp in range(4))
+    s.close()
+
+
+# --------------------------------------------------------------- latency ring
+def test_latency_ring_matches_scalar_record():
+    rng = np.random.default_rng(5)
+    ns = rng.integers(100, 50_000_000, 3000)
+    ref = LatencyHistogram()
+    for v in ns:
+        ref.record(int(v))
+    m = Metrics()
+    for v in ns:
+        m.fault_ring.push(int(v), FK_ZERO)
+    m.sync()
+    h = m.fault_latency
+    assert h.count == ref.count
+    assert h.buckets == ref.buckets
+    assert h.total_ns == ref.total_ns
+    assert h.max_ns == ref.max_ns
+    assert h.samples == ref.samples
+    assert h.percentile(0.9) == ref.percentile(0.9)
+
+
+def test_latency_ring_kind_split_and_deferred_counters():
+    m = Metrics()
+    for _ in range(10):
+        m.fault_ring.push(5_000, FK_ZERO | FK_FAST)
+    for _ in range(4):
+        m.fault_ring.push(200_000, FK_COMPRESSED)
+    m.sync()
+    assert m.fault_latency.count == 14
+    assert m.fault_latency_by_kind["zero"].count == 10
+    assert m.fault_latency_by_kind["compressed"].count == 4
+    # deferred fast-path counters settle at flush
+    assert m.fault_fast_path == 10
+    assert m.fault_zero_pages == 10
+    assert m.crc_checks == 10
+
+
+def test_latency_ring_flushes_when_full():
+    m = Metrics()
+    cap = m.fault_ring._cap
+    for _ in range(cap + 10):
+        m.fault_ring.push(1_000, FK_ZERO)
+    # the overflow flush folded the first `cap` samples already
+    assert m.fault_latency.count >= cap
+    m.sync()
+    assert m.fault_latency.count == cap + 10

@@ -65,24 +65,25 @@ def test_partial_fault_leaves_consistent_split_state():
 
 def corrupt_one_stored_mp(backend):
     """Flip bits in one stored MP behind the engine's back, whichever
-    representation (standalone blob or batch extent) holds it."""
+    representation (tagged standalone blob or batch extent) holds it."""
     for key, entry in backend._compressed.items():
-        if isinstance(entry, bytes):
-            blob = bytearray(entry)
+        if entry[0] in ("z", "v"):
+            blob = bytearray(entry[1])
             blob[0] ^= 0xFF
-            backend._compressed[key] = bytes(blob)
+            backend._compressed[key] = (entry[0], bytes(blob))
             return
     # batched path: corrupt the decompressed payload of one extent (zlib
     # would reject a corrupted stream outright; corrupting the raw cache
     # exercises the CRC check itself)
     key = next(iter(backend._extents))
-    blob, is_raw, remaining, stored_len = backend._extents[key]
-    if not is_raw:
+    ext = backend._extents[key]
+    if not ext.is_raw:
         import zlib
-        blob = zlib.decompress(blob)
-    raw = bytearray(blob)
+        ext.payload = zlib.decompress(ext.payload)
+        ext.is_raw = True
+    raw = bytearray(ext.payload)
     raw[0] ^= 0xFF
-    backend._extents[key] = [bytes(raw), True, remaining, stored_len]
+    ext.payload = bytes(raw)
 
 
 def test_crc_detects_backend_corruption():

@@ -192,10 +192,11 @@ def test_crc_mismatch_injection_batched_swap_in():
     # corrupt the extent payload (cache it raw first: a corrupted zlib
     # stream would fail in inflate, which is not the check under test)
     key = next(iter(s.backend._extents))
-    blob, is_raw, remaining, stored_len = s.backend._extents[key]
-    raw = bytearray(blob if is_raw else zlib.decompress(blob))
+    ext = s.backend._extents[key]
+    raw = bytearray(ext.payload if ext.is_raw else zlib.decompress(ext.payload))
     raw[len(raw) // 2] ^= 0x01
-    s.backend._extents[key] = [bytes(raw), True, remaining, stored_len]
+    ext.payload = bytes(raw)
+    ext.is_raw = True
     with pytest.raises(CorruptionError):
         s.engine.swap_in_ms(g, batched=True)
     assert s.metrics.crc_failures >= 1
@@ -218,10 +219,11 @@ def test_crc_mismatch_injection_scalar_fault_on_batched_store():
     s.write(s.ms_addr(g), data)
     s.engine.swap_out_ms(g, batched=True)
     key = next(iter(s.backend._extents))
-    blob, is_raw, remaining, stored_len = s.backend._extents[key]
-    raw = bytearray(blob if is_raw else zlib.decompress(blob))
+    ext = s.backend._extents[key]
+    raw = bytearray(ext.payload if ext.is_raw else zlib.decompress(ext.payload))
     raw[0] ^= 0xFF
-    s.backend._extents[key] = [bytes(raw), True, remaining, stored_len]
+    ext.payload = bytes(raw)
+    ext.is_raw = True
     with pytest.raises(CorruptionError):
         s.read(s.ms_addr(g), s.cfg.ms_bytes)
     assert s.metrics.crc_failures >= 1
@@ -252,14 +254,18 @@ def test_disk_tier_kind_selection_matches_scalar(tmp_path):
 
 
 def test_stored_bytes_stable_after_partial_extent_fault():
-    """A fault decompressing an extent must not inflate accounting."""
-    s = fresh()
+    """A fault decompressing an extent must not inflate accounting.
+
+    Probes the scalar slice-only reference path, so extent readahead is
+    disabled (with it on, the first fault legitimately consumes the whole
+    extent)."""
+    s = fresh(swap=SwapConfig(readahead_enabled=False))
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0x3A, np.uint8))
     s.write(s.ms_addr(g), data)
     s.engine.swap_out_ms(g, batched=True)
     before = s.backend.stored_bytes()
-    # fault one MP: _ext_take caches the extent raw
+    # fault one MP: the load peeks + caches the extent raw
     assert s.read(s.ms_addr(g), s.cfg.mp_bytes) == data[:s.cfg.mp_bytes]
     assert s.backend.stored_bytes() == before
     s.close()
