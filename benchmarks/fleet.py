@@ -1,25 +1,25 @@
-"""Fleet control plane: trace-driven multi-node replay (ISSUE 2).
+"""Fleet control plane: trace-driven multi-node replay + chaos (ISSUE 2/4).
 
-Drives a seeded >=2k-op trace through a 4-node fleet (two failure
-domains): FRONT fill past the fleet admission cap, BACK aging with
-staggered reclaim windows, a Zipf fault burst, churn, and one full
-rolling hot-upgrade. Reports fleet-wide swap-in (fault-path) latency
-percentiles against the paper's 10 us P90 claim, plus a determinism bit:
-the same trace replayed twice must produce byte-identical deterministic
-snapshots (the CI canary gates on it).
+Two scenarios, both through the replay-equivalence harness
+(``repro.fleet.harness``: run-twice-compare with a first-divergence
+report):
+
+  * **replay** -- a seeded >=2k-op trace through a 4-node fleet (two
+    failure domains): FRONT fill past the fleet admission cap, BACK aging
+    with staggered reclaim windows, a Zipf fault burst, churn, and one
+    full rolling hot-upgrade. Reports fleet-wide swap-in (fault-path)
+    latency percentiles against the paper's 10 us P90 claim.
+  * **chaos** -- a seeded failure schedule layered on the same workload:
+    live MS migrations under load, node kills (drained and hard),
+    controller failure recovery, and node recoveries. The determinism
+    contract must hold across chaos too; the CI canary gates on both
+    ``fleet_replay_deterministic`` and ``fleet_chaos_deterministic``.
 """
 from __future__ import annotations
 
-import json
-
 from repro.core.config import small_test_config
-from repro.fleet import (REJECT_OVERCOMMIT, FleetConfig, FleetController,
-                         NodeAgent, TraceReplayer, paper_trace)
-
-
-def _build_fleet(n_nodes: int, cfg) -> FleetController:
-    nodes = [NodeAgent(i, cfg, failure_domain=i % 2) for i in range(n_nodes)]
-    return FleetController(nodes, FleetConfig())
+from repro.fleet import REJECT_OVERCOMMIT, chaos_trace, paper_trace
+from repro.fleet.harness import replay_twice
 
 
 def run(smoke: bool = False, verbose: bool = True) -> dict:
@@ -31,23 +31,16 @@ def run(smoke: bool = False, verbose: bool = True) -> dict:
                                              - cfg.mpool_reserve_ms) * 1.35),
                       burst=600 if smoke else 2000,
                       churn_frees=20)
-    lines = gen.lines()
 
-    results = []
-    for _rep in range(2):                    # two runs: the determinism bit
-        fleet = _build_fleet(n_nodes, cfg)
-        rep = TraceReplayer(fleet, lines)
-        res = rep.run()
-        results.append((rep.deterministic_bytes(), res))
-        fleet.close()
-    (b1, res), (b2, _) = results
-    det = json.loads(b1.decode())
-    lat = res["latency"]
+    eq = replay_twice(gen.lines(), n_nodes=n_nodes, domains=2, cfg=cfg)
+    det = eq.runs[0].deterministic
+    lat = eq.runs[0].result["latency"]
 
     out = {
         "n_nodes": n_nodes,
         "trace_ops": gen.n_ops,
-        "deterministic": 1.0 if b1 == b2 else 0.0,
+        "deterministic": 1.0 if eq.identical else 0.0,
+        "divergence": eq.divergence or "",
         "admitted": det["admitted"],
         "rejected_overcommit": det["rejections"][REJECT_OVERCOMMIT],
         "reclaimed_mps": det["reclaimed_mps"],
@@ -70,11 +63,52 @@ def run(smoke: bool = False, verbose: bool = True) -> dict:
               f"P90={out['swap_in_p90_us']:.1f}us "
               f"(paper target: P90 < 10us on DPU hardware)  "
               f"deterministic={bool(out['deterministic'])}")
+        if eq.divergence:
+            print(f"DIVERGENCE: {eq.divergence}")
+    return out
+
+
+def run_chaos(smoke: bool = False, verbose: bool = True) -> dict:
+    """Seeded chaos scenario: the determinism bit must survive kills,
+    recoveries and live migrations (the failure schedule is part of the
+    trace, so two replays see identical failures)."""
+    n_nodes = 4
+    cfg = small_test_config()
+    managed = n_nodes * (cfg.n_phys_ms - cfg.mpool_reserve_ms)
+    gen = chaos_trace(13, cfg.ms_bytes, cfg.mps_per_ms, n_nodes,
+                      fill_ms=int(managed * 1.1),
+                      burst=400 if smoke else 1500,
+                      kills=2, migrations=3)
+
+    eq = replay_twice(gen.lines(), n_nodes=n_nodes, domains=2, cfg=cfg)
+    det = eq.runs[0].deterministic
+    c = det["replay"]
+
+    out = {
+        "trace_ops": gen.n_ops,
+        "deterministic": 1.0 if eq.identical else 0.0,
+        "divergence": eq.divergence or "",
+        "kills": c["kills"],
+        "recovers": c["recovers"],
+        "migrations": det["migrations"],
+        "migration_mps": det["migration_mps"],
+        "ms_replaced": det["ms_replaced"],
+        "ms_lost": det["ms_lost"],
+        "verify_failures": c["verify_failures"],
+    }
+    if verbose:
+        print(f"chaos: {out['trace_ops']} ops, kills={out['kills']} "
+              f"recovers={out['recovers']} migrations={out['migrations']} "
+              f"replaced={out['ms_replaced']} lost={out['ms_lost']} "
+              f"deterministic={bool(out['deterministic'])}")
+        if eq.divergence:
+            print(f"DIVERGENCE: {eq.divergence}")
     return out
 
 
 def rows(smoke: bool = False) -> list:
     r = run(smoke=smoke, verbose=False)
+    ch = run_chaos(smoke=smoke, verbose=False)
     return [
         ("fleet_trace_ops", r["trace_ops"], f"nodes={r['n_nodes']}"),
         ("fleet_replay_deterministic", r["deterministic"],
@@ -89,8 +123,21 @@ def rows(smoke: bool = False) -> list:
         ("fleet_swap_in_p90_us", r["swap_in_p90_us"],
          f"under10us={r['frac_under_10us']:.4f}"),
         ("fleet_verify_failures", r["verify_failures"], "target=0"),
+        ("fleet_chaos_deterministic", ch["deterministic"],
+         f"kills={ch['kills']}_migrations={ch['migrations']}"),
+        ("fleet_chaos_kills", ch["kills"],
+         f"recovers={ch['recovers']}"),
+        ("fleet_chaos_migrations", ch["migrations"],
+         f"replaced={ch['ms_replaced']}_lost={ch['ms_lost']}"),
+        # lost MSs leave the read-verify written-set (a lost token has
+        # nothing left to verify), so verify_failures alone cannot see
+        # data loss: the loss count is its own gated row
+        ("fleet_chaos_ms_lost", ch["ms_lost"],
+         f"replaced={ch['ms_replaced']}"),
+        ("fleet_chaos_verify_failures", ch["verify_failures"], "target=0"),
     ]
 
 
 if __name__ == "__main__":
     run()
+    run_chaos()

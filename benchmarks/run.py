@@ -45,7 +45,7 @@ def main() -> None:
         ("lru_accuracy (Fig 15b)", lru_accuracy),
         ("backend_ratio (Fig 15c)", backend_ratio),
         ("code_size (Table 2)", code_size),
-        ("fleet (ISSUE 2: multi-node replay)", fleet),
+        ("fleet (ISSUE 2/4: multi-node replay + chaos)", fleet),
     ]
     if not args.quick:
         # smoke mode keeps fault_latency (it carries the batched-vs-scalar

@@ -175,18 +175,19 @@ class BackendStore:
         return K_COMPRESSED, crc
 
     # -------------------------------------------------------------- swap-in
-    def load(self, gfn: int, mp: int, kind: int, crc: int, out: np.ndarray) -> None:
-        """Load one MP into ``out`` (a view of the physical MS).
+    def _read_entry(self, gfn: int, mp: int, kind: int,
+                    out: np.ndarray) -> Optional[tuple]:
+        """Materialize one stored MP into ``out`` without consuming it.
 
-        Verifies the CRC *before* consuming the backend entry, so a
-        corrupt MP keeps failing detectably on every retry instead of
-        losing its data to the first failed attempt.
+        Shared by the consuming :meth:`load` (fault path) and the
+        non-consuming :meth:`peek` (migration export). Returns the
+        compressed-map entry -- ``load`` needs it to release an extent
+        row -- or ``None`` for zero/free/disk kinds.
         """
-        entry = None
         if kind == K_ZERO or kind == K_FREE:
             out[:] = 0
-            self.metrics.fault_zero_pages += 1
-        elif kind == K_COMPRESSED:
+            return None
+        if kind == K_COMPRESSED:
             with self._shard(gfn, mp):
                 entry = self._compressed.get((gfn, mp))
             if entry is None:
@@ -202,8 +203,8 @@ class BackendStore:
             else:                                 # "v": stored verbatim
                 raw = entry[1]
             out[:] = np.frombuffer(raw, dtype=np.uint8)
-            self.metrics.fault_compressed_pages += 1
-        elif kind == K_DISK:
+            return entry
+        if kind == K_DISK:
             with self._disk_lock:
                 loc = self._disk_offsets.get((gfn, mp))
                 if loc is None:
@@ -212,10 +213,43 @@ class BackendStore:
                 self._disk_file.seek(loc[0])
                 raw = self._disk_file.read(loc[1])
             out[:] = np.frombuffer(raw, dtype=np.uint8)
-        elif kind == K_NONE:
+            return None
+        if kind == K_NONE:
             raise CorruptionError(f"no backend entry for gfn={gfn} mp={mp}")
-        else:
-            raise CorruptionError(f"unknown backend kind {kind}")
+        raise CorruptionError(f"unknown backend kind {kind}")
+
+    def peek(self, gfn: int, mp: int, kind: int, crc: int,
+             out: np.ndarray) -> None:
+        """Non-consuming :meth:`load`: fill ``out`` with the stored MP and
+        verify its CRC, leaving the backend entry and the compression
+        accounting untouched.
+
+        The migration export path reads a source MS's swapped state
+        through this, so a rejected or failed migration leaves the source
+        exactly as it was. Not a fault: the fault_* page counters are not
+        bumped (CRC checks still are).
+        """
+        self._read_entry(gfn, mp, kind, out)
+        if self.cfg.backend.crc_enabled:
+            self.metrics.crc_checks += 1
+            actual = zlib.crc32(out)
+            if actual != crc:
+                self.metrics.crc_failures += 1
+                raise CorruptionError(
+                    f"CRC mismatch gfn={gfn} mp={mp}: {actual:#x} != {crc:#x}")
+
+    def load(self, gfn: int, mp: int, kind: int, crc: int, out: np.ndarray) -> None:
+        """Load one MP into ``out`` (a view of the physical MS).
+
+        Verifies the CRC *before* consuming the backend entry, so a
+        corrupt MP keeps failing detectably on every retry instead of
+        losing its data to the first failed attempt.
+        """
+        entry = self._read_entry(gfn, mp, kind, out)
+        if kind == K_ZERO or kind == K_FREE:
+            self.metrics.fault_zero_pages += 1
+        elif kind == K_COMPRESSED:
+            self.metrics.fault_compressed_pages += 1
 
         if self.cfg.backend.crc_enabled:
             self.metrics.crc_checks += 1

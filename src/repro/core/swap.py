@@ -467,10 +467,47 @@ class SwapEngine:
         self.metrics.swap_out_latency.record(_perf_ns() - t0)
         return done
 
-    def _swap_out_scalar(self, req: Req, gfn: int, grant) -> int:
+    def swap_out_mps(self, gfn: int, mps, *, blocking_lock: bool = True,
+                     batched: Optional[bool] = None) -> int:
+        """Active swap-out restricted to the given MP indices.
+
+        Same state machine as :meth:`swap_out_ms`, but only the listed
+        MPs move to the backend; MPs already swapped out or mid-IO are
+        skipped. The migration import path uses this to rebuild the
+        source MS's resident/swapped split on the destination through
+        the batched store machinery (store_batch extents).
+        """
+        idxs = _np.asarray(mps, dtype=_np.int64)
+        if len(idxs) == 0:
+            return 0
+        if self.virt.table.is_pinned(gfn):
+            raise PinnedError(f"gfn {gfn} is pinned (mpool/DMA)")
+        pfn = int(self.virt.table.pfn[gfn])
+        if pfn == NO_PFN:
+            return 0
+        req = self.reqs.get_or_create(gfn, pfn)
+        grant = req.rwlock.acquire_write(blocking=blocking_lock)
+        if grant is None:
+            return 0
+        t0 = _perf_ns()
+        if batched is None:
+            batched = self.cfg.swap.batch_enabled
+        try:
+            if batched:
+                done = self._swap_out_batched(req, gfn, grant, todo=idxs)
+            else:
+                done = self._swap_out_scalar(req, gfn, grant,
+                                             mps=[int(i) for i in idxs])
+        finally:
+            req.rwlock.release_write(grant)
+        self.metrics.swap_out_latency.record(_perf_ns() - t0)
+        return done
+
+    def _swap_out_scalar(self, req: Req, gfn: int, grant,
+                         mps: Optional[List[int]] = None) -> int:
         rec = req.record
         done = 0
-        for mp in range(self.cfg.mps_per_ms):
+        for mp in (range(self.cfg.mps_per_ms) if mps is None else mps):
             if grant.cancelled:                   # reader bumped us (2.2)
                 self.metrics.writer_cancels += 1
                 break
@@ -505,7 +542,8 @@ class SwapEngine:
                 req.mp_cond.notify_all()
         return done
 
-    def _swap_out_batched(self, req: Req, gfn: int, grant) -> int:
+    def _swap_out_batched(self, req: Req, gfn: int, grant,
+                          todo: Optional[_np.ndarray] = None) -> int:
         """Swap out in MP index-vector chunks (tentpole data path).
 
         Each chunk runs the scalar path's exact state transitions, but on
@@ -522,9 +560,12 @@ class SwapEngine:
         done = 0
         # the write lock excludes faults and other writers, so the resident
         # set is fixed for the whole task: derive the MP index vector once
-        # and walk it in cancellation-checked chunks
+        # and walk it in cancellation-checked chunks (an explicit ``todo``
+        # subset is intersected with it, so already-swapped MPs are inert)
         with req.mp_cond:
-            todo = rec.resident_indices()
+            resident = rec.resident_indices()
+            todo = resident if todo is None else todo[
+                _np.isin(todo, resident)]
         for lo in range(0, len(todo), chunk):
             if grant.cancelled:
                 self.metrics.writer_cancels += 1

@@ -9,7 +9,9 @@ and what the framework integrations (elastic_kv / elastic_params) drive.
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from . import scheduler as sched
 from .backend import BackendStore
@@ -92,6 +94,72 @@ class TaijiSystem:
             self.reqs.remove(gfn)
         with self._gfn_lock:
             self._free_gfns.append(gfn)
+
+    # ------------------------------------------------------ export / import
+    def export_ms(self, gfn: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Portable image of one MS: ``(rows, resident)``.
+
+        ``rows`` is the guest-visible byte content of every MP (shape
+        ``(mps_per_ms, mp_bytes)``); ``resident`` marks which MPs held a
+        physical frame at export time. Non-mutating: swapped MPs are read
+        through the backend's CRC-verified :meth:`~.backend.BackendStore.peek`
+        without consuming their entries, so a migration that is later
+        rejected (or fails read-verify) leaves this node untouched.
+        Also the read-verify primitive itself -- exporting the imported
+        copy yields its guest-visible bytes without faulting anything in.
+        """
+        cfg = self.cfg
+        req = self.reqs.lookup(gfn)
+        grant = req.rwlock.acquire_write() if req is not None else None
+        try:
+            rows = np.zeros((cfg.mps_per_ms, cfg.mp_bytes), dtype=np.uint8)
+            resident = np.ones(cfg.mps_per_ms, dtype=bool)
+            if req is not None:
+                rec = req.record
+                # snapshot record state under the MP mutex: the zero-page
+                # fast path mutates bitmaps there without taking the rwlock
+                with req.mp_cond:
+                    swapped = rec.swapped_out_indices()
+                    kinds = rec.kinds[swapped].copy()
+                    crcs = rec.crc[swapped].copy()
+                for j, mp in enumerate(swapped):
+                    mp = int(mp)
+                    resident[mp] = False
+                    self.backend.peek(gfn, mp, int(kinds[j]), int(crcs[j]),
+                                      rows[mp])
+            pfn = int(self.virt.table.pfn[gfn])
+            if pfn != NO_PFN:
+                frame = self.phys.ms_view(pfn).reshape(cfg.mps_per_ms,
+                                                       cfg.mp_bytes)
+                res_idx = np.flatnonzero(resident)
+                rows[res_idx] = frame[res_idx]
+            return rows, resident
+        finally:
+            if grant is not None:
+                req.rwlock.release_write(grant)
+
+    def import_ms(self, rows: np.ndarray, resident: np.ndarray) -> int:
+        """Admit one exported MS image; returns the new gfn.
+
+        Allocates a fresh MS, materializes the guest-visible bytes, then
+        rebuilds the source's resident/swapped split by swapping the
+        non-resident MPs back out through the batched store machinery
+        (store_batch extents), so a migrated MS lands with the same
+        elasticity state it left with.
+        """
+        cfg = self.cfg
+        rows = np.ascontiguousarray(rows, dtype=np.uint8)
+        if rows.shape != (cfg.mps_per_ms, cfg.mp_bytes):
+            raise ValueError(
+                f"MS image shape {rows.shape} != "
+                f"({cfg.mps_per_ms}, {cfg.mp_bytes})")
+        gfn = self.guest_alloc_ms()
+        pfn = int(self.virt.table.pfn[gfn])
+        self.phys.ms_view(pfn).reshape(cfg.mps_per_ms, cfg.mp_bytes)[:] = rows
+        swapped = np.flatnonzero(~np.asarray(resident, dtype=bool))
+        if len(swapped):
+            self.engine.swap_out_mps(gfn, swapped)
+        return gfn
 
     # ----------------------------------------------------------- guest I/O
     def write(self, gva: int, data: bytes) -> None:

@@ -1,21 +1,35 @@
 """Fleet control plane: multi-node elasticity orchestration (paper §5,
-"across more than 30,000 servers") + trace-driven workload replay.
+"across more than 30,000 servers") + trace-driven workload replay +
+deterministic chaos (failure injection, live MS migration).
 
 Layering:
-  node (NodeAgent = one TaijiSystem + entry table, stepped)
-  -> controller (admission, placement, staggered reclaim, rolling upgrade)
-  -> trace (TSV format, TraceGen synthesis, deterministic TraceReplayer)
+  node (NodeAgent = one TaijiSystem + entry table, stepped, killable)
+  -> controller (admission, placement, staggered reclaim, rolling
+     upgrade, failure recovery, live migration)
+  -> trace (TSV format incl. chaos ops, TraceGen/FailureSchedule
+     synthesis, deterministic TraceReplayer)
+  -> harness (run-twice-compare replay equivalence + divergence reports)
 """
-from .node import NodeAgent, NodeNotServingError
-from .controller import (REJECT_NO_CAPACITY, REJECT_OVERCOMMIT,
-                         FleetConfig, FleetController)
-from .trace import (TraceGen, TraceHeader, TraceReplayer, page_bytes,
-                    page_kind, paper_trace, parse_line, touch_addr)
+from .node import NodeAgent, NodeDeadError, NodeNotServingError
+from .controller import (REJECT_MIGRATE_BAD_SRC, REJECT_MIGRATE_NO_DST,
+                         REJECT_MIGRATE_VERIFY, REJECT_NO_CAPACITY,
+                         REJECT_OVERCOMMIT, FleetConfig, FleetController)
+from .trace import (FailureSchedule, TraceGen, TraceHeader, TraceReplayer,
+                    chaos_trace, page_bytes, page_kind, paper_trace,
+                    parse_line, touch_addr)
+from .harness import (Equivalence, ReplayRun, assert_deterministic,
+                      build_fleet, first_divergence, replay, replay_twice,
+                      snapshot_diff)
 
 __all__ = [
-    "NodeAgent", "NodeNotServingError",
+    "NodeAgent", "NodeDeadError", "NodeNotServingError",
     "FleetConfig", "FleetController",
     "REJECT_OVERCOMMIT", "REJECT_NO_CAPACITY",
-    "TraceGen", "TraceHeader", "TraceReplayer",
-    "page_bytes", "page_kind", "paper_trace", "parse_line", "touch_addr",
+    "REJECT_MIGRATE_BAD_SRC", "REJECT_MIGRATE_NO_DST",
+    "REJECT_MIGRATE_VERIFY",
+    "FailureSchedule", "TraceGen", "TraceHeader", "TraceReplayer",
+    "chaos_trace", "page_bytes", "page_kind", "paper_trace", "parse_line",
+    "touch_addr",
+    "Equivalence", "ReplayRun", "assert_deterministic", "build_fleet",
+    "first_divergence", "replay", "replay_twice", "snapshot_diff",
 ]

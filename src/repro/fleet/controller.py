@@ -7,7 +7,10 @@ node, *staggered reclaim* coordination (nodes are partitioned into
 stagger groups; only one group's BACK reclaim fires per fleet tick, so
 the whole fleet never compresses/swaps in the same window), and *rolling
 hot-upgrade* orchestration with failure-domain batching and
-abort-on-regression.
+abort-on-regression, *failure recovery* (a dead node's committed MSs are
+re-placed onto survivors under admission control on the next tick), and
+*live MS migration* between nodes (export -> admit + import ->
+read-verify -> drop, preserving the resident/swapped split).
 
 Concurrency model: one deterministic event loop. ``tick()`` is a fleet
 round that steps every node once; nothing runs on threads, so replaying
@@ -17,7 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Sequence, Tuple, Type
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
+
+import numpy as np
 
 from ..core.hotupgrade import EngineModule
 from ..core.metrics import LatencyHistogram
@@ -25,6 +30,18 @@ from .node import NodeAgent
 
 REJECT_OVERCOMMIT = "fleet_overcommit"
 REJECT_NO_CAPACITY = "no_serving_capacity"
+
+# migration rejection reasons: all checked *before* any mutation, so a
+# rejected migration leaves both nodes untouched
+REJECT_MIGRATE_BAD_SRC = "migrate_bad_src"
+REJECT_MIGRATE_NO_DST = "migrate_no_dst"
+REJECT_MIGRATE_VERIFY = "migrate_verify_failed"
+
+# remap_listener(src_node, old_gfn, dst_node | None, new_gfn | None,
+#                data_preserved): how the trace replayer tracks tokens
+# across migrations (preserved) and failure re-placements (fresh MS)
+RemapListener = Callable[[NodeAgent, int, Optional[NodeAgent],
+                          Optional[int], bool], None]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,8 +78,12 @@ class _RollingUpgrade:
         self.in_flight = False
         # fleet fault histogram at batch start: the latency guard judges
         # only the samples recorded *since*, so pre-upgrade history can't
-        # dilute a regression
+        # dilute a regression. pre_batch_epoch snapshots (kills,
+        # recoveries): a fleet-membership change between capture and
+        # validation invalidates the delta (the dead node's samples are in
+        # the pre hist but not the post), so the guard skips that batch.
         self.pre_batch_hist: Optional[LatencyHistogram] = None
+        self.pre_batch_epoch: Tuple[int, int] = (0, 0)
 
 
 def _hist_delta(post: LatencyHistogram,
@@ -97,6 +118,17 @@ class FleetController:
                                            REJECT_NO_CAPACITY: 0}
         self.placements: Dict[int, int] = {n.node_id: 0 for n in self.nodes}
         self.reclaimed_mps = 0
+        # chaos + migration counters
+        self.kills = 0
+        self.recoveries = 0
+        self.migrations = 0
+        self.migration_mps = 0
+        self.migrations_rejected: Dict[str, int] = {
+            REJECT_MIGRATE_BAD_SRC: 0, REJECT_MIGRATE_NO_DST: 0,
+            REJECT_MIGRATE_VERIFY: 0}
+        self.ms_replaced = 0             # re-placed after a hard kill (fresh)
+        self.ms_lost = 0                 # died with the node, no capacity
+        self.remap_listener: Optional[RemapListener] = None
         # rolling upgrade state
         self._rolling: Optional[_RollingUpgrade] = None
         self.upgrade_batches_done = 0
@@ -104,14 +136,22 @@ class FleetController:
         self.upgrade_abort_reason = ""
 
     # ---------------------------------------------------------- fleet sums
+    # dead nodes are out of the fleet: their physical MSs back nothing and
+    # their committed MSs are in-flight to survivors (failure recovery)
     def fleet_managed_ms(self) -> int:
-        return sum(n.managed_phys_ms for n in self.nodes)
+        return sum(n.managed_phys_ms for n in self.nodes if n.alive)
 
     def fleet_committed_ms(self) -> int:
-        return sum(len(n.allocated) for n in self.nodes)
+        return sum(len(n.allocated) for n in self.nodes if n.alive)
 
     def fleet_free_ms(self) -> int:
-        return sum(n.free_ms for n in self.nodes)
+        return sum(n.free_ms for n in self.nodes if n.alive)
+
+    def node_by_id(self, node_id: int) -> NodeAgent:
+        for n in self.nodes:
+            if n.node_id == node_id:
+                return n
+        raise ValueError(f"unknown node id {node_id}")
 
     # ----------------------------------------------------------- admission
     def admit_alloc(self) -> Tuple[Optional[NodeAgent], Optional[int], str]:
@@ -126,34 +166,172 @@ class FleetController:
         if self.fleet_committed_ms() + 1 > cap:
             self.rejections[REJECT_OVERCOMMIT] += 1
             return None, None, REJECT_OVERCOMMIT
-        candidates = [n for n in self.nodes
-                      if n.serving and len(n.allocated) < n.capacity_ms]
-        if not candidates:
+        node = self._pick_target()
+        if node is None:
             self.rejections[REJECT_NO_CAPACITY] += 1
             return None, None, REJECT_NO_CAPACITY
-        node = min(candidates, key=lambda n: (n.pressure(), n.node_id))
         gfn = node.alloc_ms()
         self.admitted += 1
         self.placements[node.node_id] += 1
         return node, gfn, "ok"
+
+    def _pick_target(self,
+                     exclude: Optional[NodeAgent] = None
+                     ) -> Optional[NodeAgent]:
+        """The one placement policy, shared by admission and migration:
+        least-pressured serving node with virtual headroom (node_id
+        breaks ties deterministically), optionally excluding a node."""
+        candidates = [n for n in self.nodes
+                      if n is not exclude and n.serving
+                      and len(n.allocated) < n.capacity_ms]
+        if not candidates:
+            return None
+        return min(candidates, key=lambda n: (n.pressure(), n.node_id))
 
     # --------------------------------------------------------- fleet round
     def reclaim_group_of(self, node_index: int) -> int:
         return node_index % self.cfg.reclaim_stagger_groups
 
     def tick(self) -> int:
-        """One fleet round: step every node, stagger reclaim windows,
-        drive any in-flight rolling upgrade. Returns MPs reclaimed."""
+        """One fleet round: detect dead nodes (failure recovery), step
+        every surviving node, stagger reclaim windows, drive any in-flight
+        rolling upgrade. Returns MPs reclaimed."""
+        for node in self.nodes:
+            if not node.alive and node.allocated:
+                self._replace_dead_ms(node)
         groups = self.cfg.reclaim_stagger_groups
         active_group = self.ticks % groups
         reclaimed = 0
         for i, node in enumerate(self.nodes):
+            if not node.alive:
+                continue
             window = node.serving and self.reclaim_group_of(i) == active_group
             reclaimed += node.step(reclaim=window)
         self.reclaimed_mps += reclaimed
         self._drive_rolling()
         self.ticks += 1
         return reclaimed
+
+    # ---------------------------------------------------- failure injection
+    def kill_node(self, node_id: int, *, drain: bool = False) -> None:
+        """Deterministic failure injection: kill one NodeAgent.
+
+        ``drain=True`` is a graceful decommission: committed MSs are
+        live-migrated to survivors first (guest-visible bytes preserved);
+        whatever cannot be placed dies with the node. ``drain=False`` is
+        a hard crash -- contents are lost, and the next :meth:`tick`
+        detects the dead node and re-places its committed MSs as fresh
+        allocations under normal admission control. Idempotent.
+        """
+        node = self.node_by_id(node_id)
+        if not node.alive:
+            return
+        if drain:
+            for gfn in sorted(node.allocated):
+                self.migrate_ms(node, gfn)
+            # whatever could not be placed dies with the node -- counted
+            # lost, NOT re-placed as a fresh MS (a silent zeroed
+            # replacement would mislabel data loss as recovery). Final by
+            # nature: the data source disappears at the kill point, so
+            # there is nothing to retry when capacity returns.
+            for gfn in sorted(node.allocated):
+                self.ms_lost += 1
+                if self.remap_listener is not None:
+                    self.remap_listener(node, gfn, None, None, False)
+            node.allocated.clear()
+        node.kill()
+        self.kills += 1
+
+    def recover_node(self, node_id: int) -> None:
+        """Bring a killed node back (fresh, empty, serving). If the node
+        was never ticked over while dead, its committed MSs are settled
+        (re-placed or lost) before the identity is reused. Idempotent."""
+        node = self.node_by_id(node_id)
+        if node.alive:
+            return
+        if node.allocated:
+            # the identity is being reused: pending MSs settle for good
+            self._replace_dead_ms(node, final=True)
+        node.recover()
+        self.recoveries += 1
+
+    def _replace_dead_ms(self, node: NodeAgent, *, final: bool = False) -> None:
+        """Re-place a dead node's committed MSs onto survivors.
+
+        The contents died with the node: each MS re-enters through the
+        normal admission path as a fresh (zeroed) allocation. A placement
+        shortage can be *transient* -- e.g. candidates draining
+        mid-upgrade, or headroom that frees up when another node recovers
+        -- so unplaced MSs stay pending on the dead node and every tick
+        retries them; only a ``final`` settlement (the node's identity is
+        being reused by :meth:`recover_node`) counts them lost. The remap
+        listener (the trace replayer) is told about both outcomes so
+        token maps and the read-verify written-set stay deterministic.
+        """
+        remaining: List[int] = []
+        for gfn in sorted(node.allocated):
+            dst, new_gfn, _reason = self.admit_alloc()
+            if dst is None:
+                if final:
+                    self.ms_lost += 1
+                    if self.remap_listener is not None:
+                        self.remap_listener(node, gfn, None, None, False)
+                else:
+                    remaining.append(gfn)
+                continue
+            self.ms_replaced += 1
+            if self.remap_listener is not None:
+                self.remap_listener(node, gfn, dst, new_gfn, False)
+        node.allocated.clear()
+        node.allocated.update(remaining)
+
+    # ------------------------------------------------------- live migration
+    def migrate_ms(self, src: Union[NodeAgent, int], gfn: int,
+                   dst: Optional[Union[NodeAgent, int]] = None, *,
+                   verify: bool = True
+                   ) -> Tuple[Optional[NodeAgent], Optional[int], str]:
+        """Live MS migration: export on the source, admit + import on the
+        destination, read-verify, then drop the source copy.
+
+        Returns ``(dst_node, new_gfn, "ok")`` or ``(None, None, reason)``.
+        With ``dst=None`` the least-pressured serving node (excluding the
+        source) is chosen, admission-control style. All rejections happen
+        before any mutation; a failed read-verify rolls the destination
+        copy back and keeps the source authoritative. The resident/swapped
+        split of the MS survives the move (import re-stores the swapped
+        MPs through the batched store machinery).
+        """
+        if isinstance(src, int):
+            src = self.node_by_id(src)
+        if isinstance(dst, int):
+            dst = self.node_by_id(dst)
+        if not src.alive or gfn not in src.allocated:
+            self.migrations_rejected[REJECT_MIGRATE_BAD_SRC] += 1
+            return None, None, REJECT_MIGRATE_BAD_SRC
+        if dst is None:
+            dst = self._pick_target(exclude=src)
+        elif (dst is src or not dst.serving
+              or len(dst.allocated) >= dst.capacity_ms):
+            dst = None
+        if dst is None:
+            self.migrations_rejected[REJECT_MIGRATE_NO_DST] += 1
+            return None, None, REJECT_MIGRATE_NO_DST
+        rows, resident = src.export_ms(gfn)      # non-consuming peek
+        new_gfn = dst.import_ms(rows, resident)
+        if verify:
+            # read-verify without faulting: export the imported copy and
+            # compare guest-visible bytes against the source image
+            got, _res = dst.system.export_ms(new_gfn)
+            if not np.array_equal(got, rows):
+                dst.evict_ms(new_gfn)            # roll back, keep source
+                self.migrations_rejected[REJECT_MIGRATE_VERIFY] += 1
+                return None, None, REJECT_MIGRATE_VERIFY
+        src.evict_ms(gfn)
+        self.migrations += 1
+        self.migration_mps += src.cfg.mps_per_ms
+        if self.remap_listener is not None:
+            self.remap_listener(src, gfn, dst, new_gfn, True)
+        return dst, new_gfn, "ok"
 
     # ------------------------------------------------------ rolling upgrade
     def start_rolling_upgrade(self, module_cls: Type[EngineModule],
@@ -168,7 +346,11 @@ class FleetController:
             raise RuntimeError("a rolling upgrade is already in flight")
         domains: Dict[int, List[NodeAgent]] = {}
         for n in self.nodes:
+            if not n.alive:              # dead nodes are not upgraded
+                continue
             domains.setdefault(n.failure_domain, []).append(n)
+        if not domains:
+            raise RuntimeError("no alive nodes to upgrade")
         batches = [sorted(domains[d], key=lambda n: n.node_id)
                    for d in sorted(domains)]
         self.upgrade_aborted = False
@@ -184,12 +366,25 @@ class FleetController:
     def upgrade_in_progress(self) -> bool:
         return self._rolling is not None
 
+    def _abort_rolling(self, reason: str) -> None:
+        self.upgrade_aborted = True
+        self.upgrade_abort_reason = reason
+        self._rolling = None
+
     def _drive_rolling(self) -> None:
         ru = self._rolling
         if ru is None:
             return
         if ru.in_flight:
             batch = ru.batches[ru.batch_idx]
+            dead = [n for n in batch if not n.alive]
+            if dead:
+                # a batch member died mid-drain/swap: abort the rollout
+                # cleanly. Surviving batch members finish their drain via
+                # step() and return to serving -- nothing stays stuck.
+                self._abort_rolling(
+                    f"node {dead[0].node_id} died mid-upgrade batch")
+                return
             if any(not n.serving for n in batch):
                 return                   # still draining/swapping
             ru.in_flight = False
@@ -202,9 +397,16 @@ class FleetController:
         if ru.batch_idx >= len(ru.batches):
             self._rolling = None         # rollout complete
             return
+        batch = ru.batches[ru.batch_idx]
+        dead = [n for n in batch if not n.alive]
+        if dead:
+            self._abort_rolling(
+                f"node {dead[0].node_id} died before its upgrade batch")
+            return
         if self.cfg.latency_guard_factor is not None:
             ru.pre_batch_hist = self._fleet_fault_hist()
-        for n in ru.batches[ru.batch_idx]:
+            ru.pre_batch_epoch = (self.kills, self.recoveries)
+        for n in batch:
             n.begin_upgrade(ru.module_cls, ru.drain_rounds)
         ru.in_flight = True
 
@@ -224,7 +426,8 @@ class FleetController:
                 return False
         guard = self.cfg.latency_guard_factor
         if (guard is not None and ru.baseline_p90_ns > 0
-                and ru.pre_batch_hist is not None):
+                and ru.pre_batch_hist is not None
+                and (self.kills, self.recoveries) == ru.pre_batch_epoch):
             since = _hist_delta(self._fleet_fault_hist(), ru.pre_batch_hist)
             if (since.count >= self.cfg.latency_guard_min_samples
                     and since.percentile(0.90) > guard * ru.baseline_p90_ns):
@@ -238,6 +441,8 @@ class FleetController:
     def _fleet_fault_hist(self) -> LatencyHistogram:
         agg = LatencyHistogram()
         for n in self.nodes:
+            if not n.alive:
+                continue
             # the fault_latency property folds pending ring samples itself
             agg.merge(n.system.metrics.fault_latency)
         return agg
@@ -251,6 +456,8 @@ class FleetController:
                            ("swap_in", lambda m: m.swap_in_latency)):
             agg = LatencyHistogram()
             for n in self.nodes:
+                if not n.alive:
+                    continue
                 agg.merge(pick(n.system.metrics))
             out[name] = agg.snapshot()
             if name == "fault":
@@ -270,6 +477,14 @@ class FleetController:
                 "reclaimed_mps": self.reclaimed_mps,
                 "fleet_committed_ms": self.fleet_committed_ms(),
                 "fleet_free_ms": self.fleet_free_ms(),
+                "alive_nodes": sum(1 for n in self.nodes if n.alive),
+                "kills": self.kills,
+                "recoveries": self.recoveries,
+                "migrations": self.migrations,
+                "migration_mps": self.migration_mps,
+                "migrations_rejected": dict(self.migrations_rejected),
+                "ms_replaced": self.ms_replaced,
+                "ms_lost": self.ms_lost,
                 "upgrade_in_progress": self.upgrade_in_progress,
                 "upgrade_batches_done": self.upgrade_batches_done,
                 "upgrade_aborted": self.upgrade_aborted,

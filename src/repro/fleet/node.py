@@ -34,6 +34,10 @@ class NodeNotServingError(InvalidStateError):
     """Raised when guest traffic hits a node that is draining mid-upgrade."""
 
 
+class NodeDeadError(InvalidStateError):
+    """Raised when any traffic hits a killed node (chaos injection)."""
+
+
 class _PendingUpgrade:
     __slots__ = ("module_cls", "rounds_left")
 
@@ -48,27 +52,69 @@ class NodeAgent:
         self.node_id = node_id
         self.cfg = cfg
         self.failure_domain = failure_domain
-        self.system = TaijiSystem(cfg)
-        self.entry = EntryOps()
-        install_module(self.system, self.entry, EngineModule(self.system))
+        self._boot()
 
         self.allocated: Set[int] = set()
+        self.alive = True                # False after chaos kill()
+        self.recoveries = 0              # completed kill->recover cycles
         self.rounds = 0                  # stepped background rounds executed
         self.reclaim_windows = 0         # rounds in which reclaim fired
         self.upgrade_epoch = 0           # completed hot-upgrades
         self.upgrade_failed = False      # last upgrade attempt failed (ABI)
         self._upgrade: Optional[_PendingUpgrade] = None
 
+    def _boot(self) -> None:
+        """Fresh system bring-up, shared by __init__ and recover() so a
+        recovered node boots exactly like a new one (GA module installed
+        through the entry table)."""
+        self.system = TaijiSystem(self.cfg)
+        self.entry = EntryOps()
+        install_module(self.system, self.entry, EngineModule(self.system))
+
     # -------------------------------------------------------------- serving
     @property
     def serving(self) -> bool:
-        """False while draining mid-upgrade: no guest traffic is served."""
-        return self._upgrade is None
+        """False while dead or draining mid-upgrade: no guest traffic."""
+        return self.alive and self._upgrade is None
+
+    def _check_alive(self) -> None:
+        if not self.alive:
+            raise NodeDeadError(f"node {self.node_id} is dead")
 
     def _check_serving(self) -> None:
-        if not self.serving:
+        self._check_alive()
+        if self._upgrade is not None:
             raise NodeNotServingError(
                 f"node {self.node_id} is draining for hot-upgrade")
+
+    # ------------------------------------------------------------ kill/recover
+    def kill(self) -> None:
+        """Chaos injection: this node dies now.
+
+        Its TaijiSystem is torn down (contents are gone, like a crashed
+        server); ``allocated`` is left intact so the controller's failure
+        recovery knows which committed MSs it must re-place. Idempotent.
+        """
+        if not self.alive:
+            return
+        self.alive = False
+        self._upgrade = None             # a draining node dies mid-drain
+        self.system.close()
+
+    def recover(self) -> None:
+        """Bring a killed node back as a fresh, empty, serving member.
+
+        Boots a new TaijiSystem with the GA module installed (a replaced
+        server PXE-boots the base image, not whatever was mid-rollout);
+        lifetime counters (rounds, upgrade_epoch) survive the identity.
+        """
+        if self.alive:
+            raise InvalidStateError(f"node {self.node_id} is not dead")
+        self._boot()
+        self.allocated = set()
+        self.upgrade_failed = False
+        self.alive = True
+        self.recoveries += 1
 
     # ------------------------------------------------------------- capacity
     @property
@@ -115,6 +161,38 @@ class NodeAgent:
         n = self.cfg.mp_bytes if nbytes is None else nbytes
         return self.system.read(self.system.ms_addr(gfn, mp=mp), n)
 
+    # --------------------------------------------------- migration (control)
+    def export_ms(self, gfn: int):
+        """Non-consuming MS image for migration (see TaijiSystem.export_ms).
+
+        Control-plane path: works on a draining (mid-upgrade) node too --
+        decommissioning must be able to move data off a node that is not
+        taking guest traffic -- but never on a dead one.
+        """
+        self._check_alive()
+        if gfn not in self.allocated:
+            raise InvalidStateError(
+                f"gfn {gfn} is not allocated on node {self.node_id}")
+        return self.system.export_ms(gfn)
+
+    def import_ms(self, rows, resident) -> int:
+        """Admit one exported MS image (requires a serving node)."""
+        self._check_serving()
+        gfn = self.system.import_ms(rows, resident)
+        self.allocated.add(gfn)
+        return gfn
+
+    def evict_ms(self, gfn: int) -> None:
+        """Control-plane teardown of one MS (migration source drop).
+
+        Bypasses the serving gate -- a draining node can still be drained
+        of data -- and drops the MS's backend entries through the normal
+        free path so the compression accounting returns to baseline.
+        """
+        self._check_alive()
+        self.system.guest_free_ms(gfn)
+        self.allocated.discard(gfn)
+
     # ----------------------------------------------------- stepped background
     def step(self, *, reclaim: bool = True) -> int:
         """One deterministic background round.
@@ -125,6 +203,8 @@ class NodeAgent:
         one reclaim round -- routed through the entry table so an
         upgraded module's reclaim implementation takes over seamlessly.
         """
+        if not self.alive:
+            return 0
         self.rounds += 1
         if self._upgrade is not None:
             self._upgrade.rounds_left -= 1
@@ -189,18 +269,39 @@ class NodeAgent:
 
     # -------------------------------------------------------------- snapshot
     def snapshot(self) -> Dict[str, object]:
+        if not self.alive:
+            # dead nodes have no system to snapshot: a minimal byte-stable
+            # view keeps chaos replays comparable without try/except
+            return {
+                "deterministic": {
+                    "node_id": self.node_id,
+                    "failure_domain": self.failure_domain,
+                    "alive": False,
+                    "serving": False,
+                    "allocated_ms": len(self.allocated),
+                    "rounds": self.rounds,
+                    "reclaim_windows": self.reclaim_windows,
+                    "upgrade_epoch": self.upgrade_epoch,
+                    "upgrade_failed": self.upgrade_failed,
+                    "recoveries": self.recoveries,
+                },
+                "latency": {},
+            }
         s = self.system.snapshot()
         s["deterministic"].update(
             node_id=self.node_id,
             failure_domain=self.failure_domain,
+            alive=True,
             serving=self.serving,
             allocated_ms=len(self.allocated),
             rounds=self.rounds,
             reclaim_windows=self.reclaim_windows,
             upgrade_epoch=self.upgrade_epoch,
             upgrade_failed=self.upgrade_failed,
+            recoveries=self.recoveries,
         )
         return s
 
     def close(self) -> None:
-        self.system.close()
+        if self.alive:                   # a killed node is already closed
+            self.system.close()

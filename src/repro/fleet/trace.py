@@ -23,9 +23,18 @@ Columns are ``seq, op, ms/addr, is_write``:
     aging + staggered reclaim windows).
   * ``upgrade``-- start a rolling hot-upgrade; arg is the per-node drain
     duration in rounds.
+  * ``kill``   -- chaos: kill node ``arg``; ``is_write=1`` means drained
+    (graceful decommission: MSs live-migrate off first), 0 a hard crash
+    (contents lost; the controller re-places committed MSs on the next
+    tick).
+  * ``recover``-- chaos: bring node ``arg`` back, fresh and empty.
+  * ``migrate``-- live-migrate MS token ``arg`` to the least-pressured
+    other node (controller placement, read-verified).
 
 Everything is seeded and single-threaded (round-based), so replaying the
-same trace twice yields byte-identical deterministic snapshots.
+same trace twice yields byte-identical deterministic snapshots -- the
+failure schedule is part of the trace, so chaos replays deterministically
+too.
 """
 from __future__ import annotations
 
@@ -43,6 +52,11 @@ OP_FREE = "free"
 OP_TOUCH = "touch"
 OP_TICK = "tick"
 OP_UPGRADE = "upgrade"
+# chaos ops (ISSUE 4): the failure schedule is part of the trace, so two
+# replays of the same trace see byte-identical failures
+OP_KILL = "kill"          # arg node_id; is_write=1 -> drained (graceful)
+OP_RECOVER = "recover"    # arg node_id
+OP_MIGRATE = "migrate"    # arg MS token; controller picks the destination
 
 # paper Fig 15c production mix: 76.79% zero pages, 23.21% compressed at
 # ~47.63% ratio. The generator defaults add an incompressible tail so the
@@ -95,6 +109,12 @@ def touch_addr(token: int, mp: int, ms_bytes: int, mp_bytes: int) -> int:
 class TraceHeader:
     def __init__(self, seed: int, ms_bytes: int, mps_per_ms: int,
                  zero_frac: float, comp_frac: float) -> None:
+        if mps_per_ms < 1:
+            raise ValueError(f"mps_per_ms must be >= 1, got {mps_per_ms}")
+        if ms_bytes <= 0 or ms_bytes % mps_per_ms:
+            raise ValueError(
+                f"ms_bytes ({ms_bytes}) must be a positive multiple of "
+                f"mps_per_ms ({mps_per_ms})")
         self.seed = seed
         self.ms_bytes = ms_bytes
         self.mps_per_ms = mps_per_ms
@@ -112,9 +132,16 @@ class TraceHeader:
         if TRACE_MAGIC not in line:
             raise ValueError(f"not a taiji trace header: {line!r}")
         kv = dict(tok.split("=", 1) for tok in line.split() if "=" in tok)
-        return cls(seed=int(kv["seed"]), ms_bytes=int(kv["ms_bytes"]),
-                   mps_per_ms=int(kv["mps_per_ms"]),
-                   zero_frac=float(kv["zero"]), comp_frac=float(kv["comp"]))
+        try:
+            return cls(seed=int(kv["seed"]), ms_bytes=int(kv["ms_bytes"]),
+                       mps_per_ms=int(kv["mps_per_ms"]),
+                       zero_frac=float(kv["zero"]),
+                       comp_frac=float(kv["comp"]))
+        except KeyError as e:
+            raise ValueError(
+                f"trace header missing key {e.args[0]}: {line!r}") from None
+        except ValueError as e:
+            raise ValueError(f"malformed trace header {line!r}: {e}") from None
 
 
 def format_line(seq: int, op: str, arg: int, is_write: int) -> str:
@@ -124,9 +151,21 @@ def format_line(seq: int, op: str, arg: int, is_write: int) -> str:
 
 
 def parse_line(line: str) -> Tuple[int, str, int, int]:
-    seq_s, op, arg_s, w_s = line.rstrip("\n").split("\t")
-    base = 16 if arg_s.startswith("0x") else 10
-    return int(seq_s), op, int(arg_s, base), int(w_s)
+    parts = line.rstrip("\n").split("\t")
+    if len(parts) != 4:
+        raise ValueError(
+            f"malformed trace line (want 4 tab-separated columns, "
+            f"got {len(parts)}): {line!r}")
+    seq_s, op, arg_s, w_s = parts
+    try:
+        seq = int(seq_s)
+        arg = int(arg_s, 16 if arg_s.startswith("0x") else 10)
+        w = int(w_s)
+    except ValueError as e:
+        raise ValueError(f"malformed trace line {line!r}: {e}") from None
+    if w not in (0, 1):
+        raise ValueError(f"is_write must be 0 or 1 in {line!r}")
+    return seq, op, arg, w
 
 
 # --------------------------------------------------------------- generator
@@ -201,7 +240,35 @@ class TraceGen:
                         settle_ticks: int = 8) -> None:
         """Rolling hot-upgrade marker + enough ticks to complete it."""
         self._ops.append((OP_UPGRADE, drain_rounds, 0))
-        self._ops.append((OP_TICK, settle_ticks, 0))
+        if settle_ticks:
+            self._ops.append((OP_TICK, settle_ticks, 0))
+
+    # -------------------------------------------------------- chaos phases
+    def kill_node(self, node_id: int, *, drain: bool = False,
+                  settle_ticks: int = 2) -> None:
+        """Chaos op: kill a node (``drain`` = migrate its MSs off first);
+        the settle ticks let the controller run failure recovery."""
+        self._ops.append((OP_KILL, node_id, 1 if drain else 0))
+        if settle_ticks:
+            self._ops.append((OP_TICK, settle_ticks, 0))
+
+    def recover_node(self, node_id: int, settle_ticks: int = 1) -> None:
+        """Chaos op: bring a killed node back (fresh and empty)."""
+        self._ops.append((OP_RECOVER, node_id, 0))
+        if settle_ticks:
+            self._ops.append((OP_TICK, settle_ticks, 0))
+
+    def migrate(self, token: int) -> None:
+        """Live-migrate one MS token (replay-side controller placement)."""
+        self._ops.append((OP_MIGRATE, token, 0))
+
+    def migrate_sample(self, n: int) -> List[int]:
+        """Migrate a seeded sample of live tokens."""
+        n = min(n, len(self._live))
+        tokens = self._rng.sample(self._live, n)
+        for token in tokens:
+            self.migrate(token)
+        return tokens
 
     # -------------------------------------------------------------- output
     def lines(self) -> List[str]:
@@ -234,11 +301,15 @@ class TraceReplayer:
                  upgrade_module_cls=None, verify_reads: bool = True) -> None:
         from ..core.hotupgrade import EngineModuleV2
         from .controller import REJECT_NO_CAPACITY, REJECT_OVERCOMMIT
-        from .node import NodeNotServingError
+        from .node import NodeDeadError, NodeNotServingError
         self._not_serving_exc = NodeNotServingError
+        self._dead_exc = NodeDeadError
         self.controller = controller
         self.upgrade_module_cls = upgrade_module_cls or EngineModuleV2
         self.verify_reads = verify_reads
+        # failure recovery + drain migrations remap (node, gfn) pairs; the
+        # listener keeps the token map and the written-set in sync
+        controller.remap_listener = self._on_remap
 
         lines = [ln for ln in lines if ln.strip()]
         if not lines or not lines[0].startswith("#"):
@@ -247,12 +318,19 @@ class TraceReplayer:
         self._body = [ln for ln in lines[1:] if not ln.startswith("#")]
 
         self.placed: Dict[int, Tuple[object, int]] = {}   # token -> (node, gfn)
-        self.written: Set = set()                          # (token, mp) pairs
+        self._loc: Dict[Tuple[int, int], int] = {}  # (node_id, gfn) -> token
+        # token -> written MP set: keyed by token so frees, hard-kill
+        # re-placements and losses forget a whole token in one pop
+        self.written: Dict[int, Set[int]] = {}
         self.counters: Dict[str, int] = {
             "ops": 0, "allocs": 0, "frees": 0, "reads": 0, "writes": 0,
             "ticks": 0, "upgrades": 0, "touch_unplaced": 0,
             "touch_not_serving": 0, "free_not_serving": 0,
             "verify_failures": 0,
+            "kills": 0, "recovers": 0,
+            "migrations": 0, "migrate_rejected": 0, "migrate_unplaced": 0,
+            "touch_dead": 0, "free_dead": 0,
+            "ms_migrated": 0, "ms_replaced": 0, "ms_lost": 0,
             "reject_" + REJECT_OVERCOMMIT: 0,
             "reject_" + REJECT_NO_CAPACITY: 0,
         }
@@ -276,9 +354,52 @@ class TraceReplayer:
                 self.controller.start_rolling_upgrade(
                     self.upgrade_module_cls, drain_rounds=arg)
                 self.counters["upgrades"] += 1
+            elif op == OP_KILL:
+                self.controller.kill_node(arg, drain=bool(is_write))
+                self.counters["kills"] += 1
+            elif op == OP_RECOVER:
+                self.controller.recover_node(arg)
+                self.counters["recovers"] += 1
+            elif op == OP_MIGRATE:
+                self._op_migrate(arg)
             else:
                 raise ValueError(f"unknown trace op {op!r}: {line!r}")
         return self.result()
+
+    # -------------------------------------------------------- chaos remaps
+    def _on_remap(self, src_node, old_gfn: int, dst_node,
+                  new_gfn, preserved: bool) -> None:
+        """Controller notification: an MS moved (migration, preserved) or
+        was re-placed fresh / lost (failure recovery)."""
+        token = self._loc.pop((src_node.node_id, old_gfn), None)
+        if token is None:
+            return                       # not a replayer-tracked MS
+        if dst_node is None:             # lost with the node: no capacity
+            self.placed.pop(token, None)
+            self.counters["ms_lost"] += 1
+            self.written.pop(token, None)
+            return
+        self.placed[token] = (dst_node, new_gfn)
+        self._loc[(dst_node.node_id, new_gfn)] = token
+        if preserved:
+            self.counters["ms_migrated"] += 1
+        else:
+            # hard-kill re-placement: a fresh zeroed MS -- prior writes
+            # are gone, so read-verify must not expect them
+            self.counters["ms_replaced"] += 1
+            self.written.pop(token, None)
+
+    def _op_migrate(self, token: int) -> None:
+        placed = self.placed.get(token)
+        if placed is None:
+            self.counters["migrate_unplaced"] += 1
+            return
+        node, gfn = placed
+        dst, _new_gfn, _reason = self.controller.migrate_ms(node, gfn)
+        if dst is None:
+            self.counters["migrate_rejected"] += 1
+        else:
+            self.counters["migrations"] += 1   # map updated via _on_remap
 
     def _op_alloc(self, token: int) -> None:
         node, gfn, reason = self.controller.admit_alloc()
@@ -288,6 +409,7 @@ class TraceReplayer:
             self.counters[key] = self.counters.get(key, 0) + 1
             return
         self.placed[token] = (node, gfn)
+        self._loc[(node.node_id, gfn)] = token
 
     def _op_free(self, token: int) -> None:
         placed = self.placed.pop(token, None)
@@ -296,6 +418,12 @@ class TraceReplayer:
         node, gfn = placed
         try:
             node.free_ms_gfn(gfn)
+        except self._dead_exc:
+            # the owner died and recovery has not settled yet: the free is
+            # lost traffic; the tick-driven re-placement will remap it
+            self.counters["free_dead"] += 1
+            self.placed[token] = placed
+            return
         except self._not_serving_exc:
             # the owner is draining: the free is lost traffic, like any
             # other op against a mid-upgrade node; its data stays live
@@ -303,7 +431,8 @@ class TraceReplayer:
             self.placed[token] = placed
             return
         self.counters["frees"] += 1
-        self.written = {(t, m) for t, m in self.written if t != token}
+        self._loc.pop((node.node_id, gfn), None)
+        self.written.pop(token, None)
 
     def _op_touch(self, addr: int, is_write: int) -> None:
         hdr = self.header
@@ -319,16 +448,18 @@ class TraceReplayer:
                 node.write_mp(gfn, mp, page_bytes(
                     hdr.seed, token, mp, hdr.mp_bytes,
                     hdr.zero_frac, hdr.comp_frac))
-                self.written.add((token, mp))
+                self.written.setdefault(token, set()).add(mp)
                 self.counters["writes"] += 1
             else:
                 got = node.read_mp(gfn, mp)
                 self.counters["reads"] += 1
-                if self.verify_reads and (token, mp) in self.written:
+                if self.verify_reads and mp in self.written.get(token, ()):
                     want = page_bytes(hdr.seed, token, mp, hdr.mp_bytes,
                                       hdr.zero_frac, hdr.comp_frac)
                     if got != want:
                         self.counters["verify_failures"] += 1
+        except self._dead_exc:
+            self.counters["touch_dead"] += 1
         except self._not_serving_exc:
             self.counters["touch_not_serving"] += 1
 
@@ -341,6 +472,61 @@ class TraceReplayer:
     def deterministic_bytes(self) -> bytes:
         return json.dumps(self.result()["deterministic"],
                           sort_keys=True).encode()
+
+
+class FailureSchedule:
+    """Seeded chaos plan: which nodes die (drained or hard), which come
+    back, and how many live MSs migrate.
+
+    The plan is derived purely from ``(seed, n_nodes)`` and rendered into
+    trace ops, so the failure schedule travels with the trace: replaying
+    the same file replays the same failures at the same points, and the
+    determinism contract extends over chaos by construction.
+    """
+
+    def __init__(self, seed: int, n_nodes: int, *, kills: int = 1,
+                 drain_frac: float = 0.5, recover: bool = True,
+                 migrations: int = 0) -> None:
+        if n_nodes < 2:
+            raise ValueError("a chaos schedule needs >= 2 nodes (a survivor)")
+        rng = random.Random(seed)
+        self.seed = seed
+        self.n_nodes = n_nodes
+        self.migrations = migrations
+        kills = min(kills, n_nodes - 1)          # someone must survive
+        victims = rng.sample(range(n_nodes), kills)
+        self.kill_events: List[Tuple[int, bool]] = [
+            (v, rng.random() < drain_frac) for v in victims]
+        self.recover_nodes: List[int] = list(victims) if recover else []
+
+
+def chaos_trace(seed: int, ms_bytes: int, mps_per_ms: int, n_nodes: int, *,
+                fill_ms: int, burst: int, kills: int = 1,
+                migrations: int = 2, drain_frac: float = 0.5,
+                recover: bool = True,
+                zero_frac: float = DEFAULT_ZERO_FRAC,
+                comp_frac: float = DEFAULT_COMP_FRAC) -> TraceGen:
+    """The canonical chaos scenario: fill + age (so the fleet holds a
+    mixed resident/swapped population), live-migrate a seeded sample of
+    MSs, fault-burst, kill nodes mid-replay (drained and hard per the
+    seeded schedule), burst over the survivors, recover, and burst again
+    against the rebuilt fleet."""
+    gen = TraceGen(seed, ms_bytes, mps_per_ms, zero_frac, comp_frac)
+    sched = FailureSchedule(seed ^ 0xC4A05, n_nodes, kills=kills,
+                            drain_frac=drain_frac, recover=recover,
+                            migrations=migrations)
+    gen.front_fill(fill_ms)
+    gen.back_phase(8)                       # age to COLD + reclaim windows
+    gen.migrate_sample(sched.migrations)    # live migration under load
+    gen.fault_burst(burst // 3, tick_every=48)
+    for node_id, drain in sched.kill_events:
+        gen.kill_node(node_id, drain=drain)
+    gen.fault_burst(burst // 3, tick_every=48)
+    for node_id in sched.recover_nodes:
+        gen.recover_node(node_id)
+    gen.back_phase(4)
+    gen.fault_burst(burst - 2 * (burst // 3), tick_every=64)
+    return gen
 
 
 def paper_trace(seed: int, ms_bytes: int, mps_per_ms: int, *,

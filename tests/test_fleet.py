@@ -7,16 +7,15 @@ import pytest
 from repro.core.config import ABI_VERSION, small_test_config
 from repro.core.hotupgrade import EngineModule, EngineModuleV2
 from repro.fleet import (REJECT_NO_CAPACITY, REJECT_OVERCOMMIT, FleetConfig,
-                         FleetController, NodeAgent, NodeNotServingError,
-                         TraceGen, TraceHeader, TraceReplayer, page_bytes,
-                         paper_trace, parse_line, touch_addr)
+                         NodeNotServingError, TraceGen, TraceHeader,
+                         TraceReplayer, page_bytes, paper_trace, parse_line,
+                         touch_addr)
+from repro.fleet.harness import build_fleet, replay_twice
 
 
 def make_fleet(n_nodes=4, domains=2, fleet_cfg=None, **cfg_overrides):
-    cfg = small_test_config(**cfg_overrides)
-    nodes = [NodeAgent(i, cfg, failure_domain=i % domains)
-             for i in range(n_nodes)]
-    return FleetController(nodes, fleet_cfg or FleetConfig())
+    return build_fleet(n_nodes, domains, small_test_config(**cfg_overrides),
+                       fleet_cfg)
 
 
 # ------------------------------------------------------------- trace format
@@ -179,16 +178,6 @@ def test_rolling_upgrade_aborts_on_regression_and_spares_other_domains():
 
 
 # ------------------------------------------------ deterministic trace replay
-def _replay_once(lines):
-    fleet = make_fleet(n_nodes=4, domains=2)
-    rep = TraceReplayer(fleet, lines)
-    rep.run()
-    out = rep.deterministic_bytes()
-    latency = rep.result()["latency"]
-    fleet.close()
-    return out, latency
-
-
 def test_seeded_trace_replay_is_byte_identical_across_runs():
     """Acceptance: a seeded 4-node, >=2k-op replay is deterministic and
     exercises admission rejection + staggered reclaim + a full rolling
@@ -196,14 +185,14 @@ def test_seeded_trace_replay_is_byte_identical_across_runs():
     cfg = small_test_config()
     gen = paper_trace(7, cfg.ms_bytes, cfg.mps_per_ms,
                       fill_ms=120, burst=600, churn_frees=20)
-    lines = gen.lines()
     assert gen.n_ops >= 2000
 
-    b1, lat1 = _replay_once(lines)
-    b2, lat2 = _replay_once(lines)
-    assert b1 == b2                           # byte-identical snapshots
+    eq = replay_twice(gen.lines(), n_nodes=4, domains=2, cfg=cfg)
+    assert eq.identical, eq.report()          # byte-identical snapshots
+    lat1 = eq.runs[0].result["latency"]
+    lat2 = eq.runs[1].result["latency"]
 
-    det = json.loads(b1.decode())
+    det = json.loads(eq.runs[0].bytes.decode())
     assert det["rejections"][REJECT_OVERCOMMIT] > 0      # admission exercised
     assert det["reclaimed_mps"] > 0                      # reclaim exercised
     assert det["upgrade_batches_done"] == 2              # full rolling upgrade

@@ -1,0 +1,295 @@
+"""Fleet chaos (ISSUE 4): deterministic node-failure injection, failure
+recovery re-placement, drained decommissions, kill-during-upgrade abort,
+and the replay-equivalence harness."""
+import json
+
+import pytest
+
+from repro.core.config import small_test_config
+from repro.core.hotupgrade import EngineModuleV2
+from repro.fleet import (NodeDeadError, TraceGen, chaos_trace)
+from repro.fleet.harness import (assert_deterministic, build_fleet,
+                                 first_divergence, replay_twice,
+                                 snapshot_diff)
+
+
+# ----------------------------------------------------------- hard failure
+def test_hard_kill_replaces_committed_ms_on_survivors():
+    fleet = build_fleet(n_nodes=3, domains=3)
+    remaps = []
+    fleet.remap_listener = (
+        lambda src, g, dst, ng, preserved: remaps.append(
+            (src.node_id, g, None if dst is None else dst.node_id,
+             preserved)))
+    for _ in range(6):
+        node, gfn, reason = fleet.admit_alloc()
+        assert reason == "ok"
+    on_victim = len(fleet.nodes[0].allocated)
+    assert on_victim > 0
+    committed_before = fleet.fleet_committed_ms()
+
+    fleet.kill_node(0)
+    assert not fleet.nodes[0].alive and not fleet.nodes[0].serving
+    fleet.tick()                          # controller detects + re-places
+
+    assert fleet.ms_replaced == on_victim and fleet.ms_lost == 0
+    assert len(remaps) == on_victim
+    assert all(dst in (1, 2) and not preserved
+               for _src, _g, dst, preserved in remaps)
+    # surviving nodes serve all live MSs; fleet accounting is consistent
+    assert fleet.fleet_committed_ms() == committed_before
+    assert len(fleet.nodes[0].allocated) == 0
+    assert all(n.serving for n in fleet.nodes if n.alive)
+    fleet.close()
+
+
+def test_dead_node_refuses_traffic_and_admission_skips_it():
+    fleet = build_fleet(n_nodes=2, domains=2)
+    n0 = fleet.nodes[0]
+    gfn = n0.alloc_ms()
+    fleet.kill_node(0)
+    with pytest.raises(NodeDeadError):
+        n0.read_mp(gfn, 0, 8)
+    with pytest.raises(NodeDeadError):
+        n0.alloc_ms()
+    node, _gfn, reason = fleet.admit_alloc()
+    assert reason == "ok" and node is fleet.nodes[1]
+    # kill is idempotent; fleet sums only count the living
+    fleet.kill_node(0)
+    assert fleet.kills == 1
+    assert fleet.fleet_managed_ms() == fleet.nodes[1].managed_phys_ms
+    fleet.close()
+
+
+# ------------------------------------------------------- drained failure
+def test_drained_kill_preserves_bytes_via_migration():
+    fleet = build_fleet(n_nodes=2, domains=2)
+    cfg = fleet.nodes[0].cfg
+    n0, n1 = fleet.nodes
+    gfn = n0.alloc_ms()
+    payload = b"\xAB" * cfg.mp_bytes
+    n0.write_mp(gfn, 0, payload)
+
+    fleet.kill_node(0, drain=True)
+    assert not n0.alive
+    assert fleet.migrations == 1 and fleet.ms_lost == 0
+    assert len(n1.allocated) == 1
+    new_gfn = next(iter(n1.allocated))
+    assert n1.read_mp(new_gfn, 0) == payload
+    fleet.tick()                          # nothing left to re-place
+    assert fleet.ms_replaced == 0
+    fleet.close()
+
+
+def test_drained_kill_with_no_capacity_counts_loss_not_replacement():
+    """A graceful decommission that cannot place an MS must report the
+    data as LOST -- never silently re-place it as a fresh zeroed MS."""
+    fleet = build_fleet(n_nodes=2, domains=2)
+    n0, n1 = fleet.nodes
+    gfn = n0.alloc_ms()
+    n0.write_mp(gfn, 0, b"\xCD" * n0.cfg.mp_bytes)
+    while len(n1.allocated) < n1.capacity_ms:   # survivor has no headroom
+        n1.alloc_ms()
+    remaps = []
+    fleet.remap_listener = (
+        lambda src, g, dst, ng, preserved: remaps.append((dst, preserved)))
+
+    fleet.kill_node(0, drain=True)
+    assert fleet.migrations == 0 and fleet.ms_lost == 1
+    assert remaps == [(None, False)]            # token dropped, not remapped
+    fleet.tick()                                # nothing left to re-place
+    assert fleet.ms_replaced == 0
+    fleet.close()
+
+
+def test_transient_placement_shortage_retries_instead_of_losing():
+    """A hard-killed node's MSs must not be written off while the
+    shortage is transient: they stay pending and re-place as soon as a
+    survivor has headroom again. Only recovery (identity reuse) settles
+    the remainder as lost."""
+    fleet = build_fleet(n_nodes=2, domains=2)
+    n0, n1 = fleet.nodes
+    n0.alloc_ms()
+    # fill the survivor exactly to the post-kill fleet overcommit cap
+    cap_after_kill = int(n1.managed_phys_ms * fleet.cfg.overcommit_cap)
+    fillers = [n1.alloc_ms() for _ in range(cap_after_kill)]
+    fleet.kill_node(0)
+    fleet.tick()                          # n1 full: nothing placeable yet
+    assert fleet.ms_lost == 0 and fleet.ms_replaced == 0
+    assert len(n0.allocated) == 1         # pending on the dead node
+
+    n1.free_ms_gfn(fillers[0])            # headroom returns
+    fleet.tick()
+    assert fleet.ms_replaced == 1 and fleet.ms_lost == 0
+    assert len(n0.allocated) == 0
+    fleet.close()
+
+
+def test_recover_settles_unplaceable_ms_as_lost():
+    fleet = build_fleet(n_nodes=2, domains=2)
+    n0, n1 = fleet.nodes
+    n0.alloc_ms()
+    while len(n1.allocated) < n1.capacity_ms:
+        n1.alloc_ms()
+    fleet.kill_node(0)
+    fleet.tick()                          # pending, not lost
+    assert fleet.ms_lost == 0
+    fleet.recover_node(0)                 # identity reused: settle for good
+    assert fleet.ms_lost == 1 and len(n0.allocated) == 0
+    assert n0.alive and n0.serving
+    fleet.close()
+
+
+# ------------------------------------------------------------- recovery
+def test_recover_rejoins_empty_and_takes_placements():
+    fleet = build_fleet(n_nodes=2, domains=2)
+    n0 = fleet.nodes[0]
+    n0.alloc_ms()
+    fleet.kill_node(0)
+    fleet.recover_node(0)                 # settles (re-places) then reboots
+    assert n0.alive and n0.serving and len(n0.allocated) == 0
+    assert n0.recoveries == 1 and fleet.recoveries == 1
+    assert fleet.ms_replaced == 1         # the committed MS moved to n1
+    # the recovered (empty) node is now the least-pressured target
+    node, _gfn, reason = fleet.admit_alloc()
+    assert reason == "ok" and node is n0
+    # recover is idempotent
+    fleet.recover_node(0)
+    assert fleet.recoveries == 1
+    fleet.close()
+
+
+# ------------------------------------------------ kill during an upgrade
+def test_kill_mid_upgrade_aborts_batch_cleanly():
+    fleet = build_fleet(n_nodes=4, domains=2)
+    fleet.start_rolling_upgrade(EngineModuleV2, drain_rounds=3)
+    fleet.tick()                          # domain-0 batch starts draining
+    draining = [n for n in fleet.nodes if not n.serving]
+    assert draining
+    fleet.kill_node(draining[0].node_id)
+    for _ in range(8):
+        fleet.tick()
+    assert fleet.upgrade_aborted
+    assert "died" in fleet.upgrade_abort_reason
+    assert not fleet.upgrade_in_progress
+    # no node stuck not-serving: every survivor drains out and serves
+    assert all(n.serving for n in fleet.nodes if n.alive)
+    fleet.close()
+
+
+def test_kill_before_later_batch_aborts_rollout():
+    fleet = build_fleet(n_nodes=4, domains=2)
+    fleet.start_rolling_upgrade(EngineModuleV2, drain_rounds=1)
+    fleet.tick()                          # batch 0 (domain 0) in flight
+    victim = next(n for n in fleet.nodes if n.failure_domain == 1)
+    fleet.kill_node(victim.node_id)
+    for _ in range(8):
+        fleet.tick()
+    assert fleet.upgrade_aborted
+    assert "died before" in fleet.upgrade_abort_reason
+    assert all(n.serving for n in fleet.nodes if n.alive)
+    fleet.close()
+
+
+# --------------------------------------- snapshots/close with dead nodes
+def test_snapshot_and_close_tolerate_dead_nodes():
+    fleet = build_fleet(n_nodes=3, domains=3)
+    fleet.nodes[1].alloc_ms()
+    fleet.kill_node(1)                    # dead *with* unsettled MSs
+    snap = fleet.snapshot()               # must not raise
+    det = snap["deterministic"]
+    assert det["alive_nodes"] == 2
+    assert det["nodes"][1]["alive"] is False
+    assert det["nodes"][1]["serving"] is False
+    assert fleet.deterministic_bytes() == fleet.deterministic_bytes()
+    assert "fault" in snap["latency"]     # latency agg skips the dead node
+    fleet.close()                         # must not raise
+    fleet.close()                         # idempotent
+
+
+# --------------------------------------------- seeded chaos trace replay
+def test_chaos_trace_replay_is_byte_identical():
+    """Acceptance: a seeded chaos trace with kills, recoveries and live
+    migrations replays byte-identically, zero verify failures, and the
+    surviving nodes serve every live MS."""
+    cfg = small_test_config()
+    gen = chaos_trace(21, cfg.ms_bytes, cfg.mps_per_ms, 4,
+                      fill_ms=60, burst=240, kills=2, migrations=3)
+    eq = assert_deterministic(gen.lines(), n_nodes=4, domains=2, cfg=cfg)
+    det = eq.runs[0].deterministic
+    c = det["replay"]
+    assert c["kills"] >= 1 and det["kills"] == c["kills"]
+    assert det["migrations"] >= 1         # >= 1 live migration executed
+    assert c["verify_failures"] == 0      # guest-visible bytes intact
+    assert c["ms_migrated"] + c["ms_replaced"] + c["ms_lost"] > 0
+    # after recovery, every node is back and serving what it holds
+    assert det["alive_nodes"] == 4
+    assert all(n["serving"] for n in det["nodes"])
+    assert det["fleet_committed_ms"] == sum(
+        n["allocated_ms"] for n in det["nodes"])
+
+
+def test_chaos_without_recovery_leaves_dead_node_settled():
+    cfg = small_test_config()
+    gen = chaos_trace(22, cfg.ms_bytes, cfg.mps_per_ms, 3,
+                      fill_ms=24, burst=120, kills=1, migrations=1,
+                      drain_frac=0.0, recover=False)
+    eq = assert_deterministic(gen.lines(), n_nodes=3, domains=3, cfg=cfg)
+    det = eq.runs[0].deterministic
+    assert det["alive_nodes"] == 2 and det["kills"] == 1
+    dead = [n for n in det["nodes"] if not n["alive"]]
+    assert len(dead) == 1 and dead[0]["allocated_ms"] == 0  # all settled
+    c = det["replay"]
+    assert c["ms_replaced"] + c["ms_lost"] > 0
+    assert c["verify_failures"] == 0
+
+
+def test_kill_during_rolling_upgrade_trace_is_deterministic():
+    cfg = small_test_config()
+    gen = TraceGen(5, cfg.ms_bytes, cfg.mps_per_ms)
+    gen.front_fill(12)
+    gen.rolling_upgrade(drain_rounds=3, settle_ticks=1)  # batch 0 drains
+    gen.kill_node(0, settle_ticks=2)      # node 0 is in domain 0 = batch 0
+    gen.back_phase(6)
+    eq = assert_deterministic(gen.lines(), n_nodes=4, domains=2, cfg=cfg)
+    det = eq.runs[0].deterministic
+    assert det["upgrade_aborted"]
+    assert det["alive_nodes"] == 3
+    alive = [n for n in det["nodes"] if n["alive"]]
+    assert all(n["serving"] for n in alive)
+
+
+# ------------------------------------------------------- harness itself
+def test_first_divergence_reports_json_path():
+    a = json.dumps({"x": {"y": 1, "z": [1, 2]}}, sort_keys=True).encode()
+    b = json.dumps({"x": {"y": 2, "z": [1, 3]}}, sort_keys=True).encode()
+    assert first_divergence(a, a) is None
+    rep = first_divergence(a, b)
+    assert "$.x.y: 1 != 2" in rep
+    assert "$.x.z[1]: 2 != 3" in rep
+
+
+def test_snapshot_diff_limit_and_shapes():
+    a = {"k": [1, 2, 3], "m": {"a": 1}}
+    b = {"k": [1, 9], "m": {"b": 1}}
+    diffs = snapshot_diff(a, b)
+    assert any("length" in d for d in diffs)
+    assert any("missing" in d for d in diffs)
+    many_a = {str(i): i for i in range(50)}
+    many_b = {str(i): i + 1 for i in range(50)}
+    assert len(snapshot_diff(many_a, many_b, limit=8)) == 8
+
+
+def test_replay_twice_detects_real_divergence():
+    """Feed the harness two *different* traces via a stateful factory:
+    it must flag the divergence and name a concrete path."""
+    cfg = small_test_config()
+    g1 = TraceGen(1, cfg.ms_bytes, cfg.mps_per_ms)
+    g1.front_fill(4)
+    g2 = TraceGen(1, cfg.ms_bytes, cfg.mps_per_ms)
+    g2.front_fill(5)
+    from repro.fleet.harness import replay
+    r1 = replay(g1.lines(), n_nodes=2, cfg=cfg)
+    r2 = replay(g2.lines(), n_nodes=2, cfg=cfg)
+    div = first_divergence(r1.bytes, r2.bytes)
+    assert div is not None and "admitted" in div

@@ -1,0 +1,175 @@
+"""Live MS migration (ISSUE 4): export/import preserves guest-visible
+bytes across every page kind (resident / zero / standalone-compressed /
+extent), the resident/swapped split survives the move, source accounting
+drains back to baseline, and admission rejects without mutating either
+node."""
+import numpy as np
+import pytest
+
+from repro.core.config import small_test_config
+from repro.fleet import (REJECT_MIGRATE_BAD_SRC, REJECT_MIGRATE_NO_DST,
+                         FleetConfig, FleetController, NodeAgent)
+
+
+def make_fleet(n_nodes=2, **overrides):
+    cfg = small_test_config(**overrides)
+    nodes = [NodeAgent(i, cfg) for i in range(n_nodes)]
+    return FleetController(nodes, FleetConfig()), nodes, cfg
+
+
+def _mixed_ms(node, cfg):
+    """One MS holding every page kind the backend can produce: resident
+    (random + patterned), zero, extent rows ("x"), a standalone zlib blob
+    ("z") and a verbatim incompressible row ("v")."""
+    gfn = node.alloc_ms()
+    mp = cfg.mp_bytes
+    rng = np.random.default_rng(0xA11CE)
+    rand = lambda: bytes(  # noqa: E731 - local helper
+        rng.integers(0, 256, mp, dtype=np.int64).astype(np.uint8))
+    pages = {
+        0: rand(),            # resident, incompressible
+        1: b"\x11" * mp,      # resident, patterned
+        2: bytes(mp),         # -> K_ZERO (batched)
+        3: bytes(mp),         # -> K_ZERO (scalar)
+        4: b"\x22" * mp,      # -> extent row ("x")
+        5: b"\x33" * mp,      # -> extent row ("x")
+        6: b"\x44" * mp,      # -> standalone zlib blob ("z")
+        7: rand(),            # -> stored verbatim ("v")
+    }
+    for i, data in pages.items():
+        node.write_mp(gfn, i, data)
+    eng = node.system.engine
+    eng.swap_out_mps(gfn, [2, 4, 5], batched=True)    # zero + joint extent
+    eng.swap_out_mps(gfn, [3, 6, 7], batched=False)   # zero + "z" + "v"
+    # white-box: all three compressed shapes really are on the backend
+    tags = {e[0] for k, e in node.system.backend._compressed.items()
+            if k[0] == gfn}
+    assert tags == {"z", "v", "x"}
+    return gfn, pages
+
+
+def test_migrate_mixed_kinds_preserves_bytes_and_split():
+    fleet, (n0, n1), cfg = make_fleet()
+    gfn, pages = _mixed_ms(n0, cfg)
+    dst, new_gfn, reason = fleet.migrate_ms(n0, gfn, n1)
+    assert reason == "ok" and dst is n1
+
+    # the resident/swapped split survived the move: 6 MPs re-stored on
+    # the destination through the batched store machinery
+    req = n1.system.reqs.lookup(new_gfn)
+    assert req is not None and req.record.swapped_out_count() == 6
+
+    # post-migration guest-visible bytes equal pre-migration for every MP
+    # (reads fault the swapped MPs back in: all four kinds round-trip)
+    for i, data in pages.items():
+        assert n1.read_mp(new_gfn, i) == data, f"mp {i} bytes changed"
+
+    # source is fully dropped and its accounting is back to baseline
+    assert gfn not in n0.allocated
+    assert n0.system.backend.stored_bytes() == 0
+    m = n0.system.metrics
+    assert m.backend_raw_bytes == 0 and m.backend_stored_bytes == 0
+    assert m.crc_failures == 0 and n1.system.metrics.crc_failures == 0
+    assert fleet.migrations == 1
+    assert fleet.migration_mps == cfg.mps_per_ms
+    fleet.close()
+
+
+def test_migrate_full_node_rejected_without_mutation():
+    fleet, (n0, n1), cfg = make_fleet()
+    gfn, _pages = _mixed_ms(n0, cfg)
+    while len(n1.allocated) < n1.capacity_ms:     # fill dst's virtual space
+        n1.alloc_ms()
+
+    src_stored = n0.system.backend.stored_bytes()
+    src_swapped = n0.system.reqs.lookup(gfn).record.swapped_out_count()
+    dst_allocated = len(n1.allocated)
+
+    dst, new_gfn, reason = fleet.migrate_ms(n0, gfn, n1)
+    assert dst is None and new_gfn is None
+    assert reason == REJECT_MIGRATE_NO_DST
+    assert fleet.migrations_rejected[REJECT_MIGRATE_NO_DST] == 1
+
+    # neither node mutated: source keeps the MS and its backend state,
+    # destination allocation count unchanged
+    assert gfn in n0.allocated
+    assert n0.system.backend.stored_bytes() == src_stored
+    assert n0.system.reqs.lookup(gfn).record.swapped_out_count() == src_swapped
+    assert len(n1.allocated) == dst_allocated
+    assert fleet.migrations == 0
+    fleet.close()
+
+
+def test_migrate_unknown_gfn_rejected():
+    fleet, (n0, n1), _cfg = make_fleet()
+    dst, _g, reason = fleet.migrate_ms(n0, 999, n1)
+    assert dst is None and reason == REJECT_MIGRATE_BAD_SRC
+    # self-migration is a no-dst rejection, also without mutation
+    gfn = n0.alloc_ms()
+    dst, _g, reason = fleet.migrate_ms(n0, gfn, n0)
+    assert dst is None and reason == REJECT_MIGRATE_NO_DST
+    assert gfn in n0.allocated
+    fleet.close()
+
+
+def test_migrate_auto_dst_picks_least_pressured():
+    fleet, nodes, cfg = make_fleet(n_nodes=3)
+    n0, n1, n2 = nodes
+    gfn = n0.alloc_ms()
+    n0.write_mp(gfn, 0, b"\xAB" * cfg.mp_bytes)
+    for _ in range(n1.managed_phys_ms - 2):       # make n1 pressured
+        n1.alloc_ms()
+    dst, new_gfn, reason = fleet.migrate_ms(n0, gfn)
+    assert reason == "ok" and dst is n2
+    assert n2.read_mp(new_gfn, 0) == b"\xAB" * cfg.mp_bytes
+    fleet.close()
+
+
+def test_migrate_fully_resident_ms():
+    """An MS that never swapped (no req record) migrates resident."""
+    fleet, (n0, n1), cfg = make_fleet()
+    gfn = n0.alloc_ms()
+    payload = b"\x77" * cfg.mp_bytes
+    n0.write_mp(gfn, 1, payload)
+    assert n0.system.reqs.lookup(gfn) is None     # no swap history
+    dst, new_gfn, reason = fleet.migrate_ms(n0, gfn, n1)
+    assert reason == "ok"
+    assert n1.system.reqs.lookup(new_gfn) is None  # still fully resident
+    assert n1.read_mp(new_gfn, 1) == payload
+    assert n1.read_mp(new_gfn, 0) == bytes(cfg.mp_bytes)
+    fleet.close()
+
+
+def test_migrate_fully_swapped_ms():
+    """A fully-swapped MS (pfn == NO_PFN on the source) migrates too."""
+    fleet, (n0, n1), cfg = make_fleet()
+    gfn = n0.alloc_ms()
+    payload = b"\x55" * cfg.mp_bytes
+    n0.write_mp(gfn, 3, payload)
+    n0.system.engine.swap_out_ms(gfn)
+    rec = n0.system.reqs.lookup(gfn).record
+    assert rec.swapped_out_count() == cfg.mps_per_ms and rec.pfn == -1
+
+    dst, new_gfn, reason = fleet.migrate_ms(n0, gfn, n1)
+    assert reason == "ok"
+    req = n1.system.reqs.lookup(new_gfn)
+    assert req.record.swapped_out_count() == cfg.mps_per_ms
+    assert n1.read_mp(new_gfn, 3) == payload
+    assert n1.system.metrics.crc_failures == 0
+    fleet.close()
+
+
+def test_export_is_non_consuming():
+    """Two exports of the same MS agree and leave the backend intact --
+    the read-verify pass must not perturb what it verifies."""
+    fleet, (n0, _n1), cfg = make_fleet()
+    gfn, pages = _mixed_ms(n0, cfg)
+    stored_before = n0.system.backend.stored_bytes()
+    rows1, res1 = n0.export_ms(gfn)
+    rows2, res2 = n0.export_ms(gfn)
+    assert np.array_equal(rows1, rows2) and np.array_equal(res1, res2)
+    assert n0.system.backend.stored_bytes() == stored_before
+    for i, data in pages.items():
+        assert rows1[i].tobytes() == data
+    assert res1.tolist() == [True, True] + [False] * 6
+    fleet.close()
