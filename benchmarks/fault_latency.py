@@ -19,8 +19,8 @@ import numpy as np
 # otherwise hold it for the default 5 ms switch interval)
 sys.setswitchinterval(0.0005)
 
-from repro.core.config import (LRUConfig, SchedulerConfig, SwapConfig,
-                               TaijiConfig, WatermarkConfig,
+from repro.core.config import (BackendConfig, LRUConfig, SchedulerConfig,
+                               SwapConfig, TaijiConfig, WatermarkConfig,
                                small_test_config)
 from repro.core.system import TaijiSystem
 
@@ -57,6 +57,7 @@ def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False,
                         readahead_enabled=readahead),
     )
     system = TaijiSystem(cfg)
+    space = system.guest
     rng = np.random.default_rng(7)
 
     payload = fill_system(system, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=7)
@@ -127,7 +128,7 @@ def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False,
                 mp = (v & -v).bit_length() - 1
             cursor[g] = mp + 1
             before = system.metrics.faults
-            system.read(system.ms_addr(g, mp=mp), 64)
+            space.read(g, 64, off=mp * cfg.mp_bytes)
             faulted += system.metrics.faults - before
             burst += 1
             if burst >= 16 or system.phys.free_count < low_ms:
@@ -223,9 +224,9 @@ def swap_throughput(smoke: bool = False, verbose: bool = True) -> dict:
             rng = np.random.default_rng(9)
             gfns = []
             for _i in range(n_ms):
-                g = s.guest_alloc_ms()
-                s.write(s.ms_addr(g),
-                        paper_mix_ms(rng, s.cfg.ms_bytes, s.cfg.mps_per_ms))
+                g = s.guest.alloc_ms()
+                s.guest.write(g, paper_mix_ms(rng, s.cfg.ms_bytes,
+                                              s.cfg.mps_per_ms))
                 gfns.append(g)
             _gc.disable()              # keep collector pauses out of best-of
             try:
@@ -268,6 +269,52 @@ def swap_throughput(smoke: bool = False, verbose: bool = True) -> dict:
     return out
 
 
+def extent_sweep(smoke: bool = False, verbose: bool = True) -> list:
+    """``BackendConfig.extent_max_rows`` sweep (ROADMAP follow-on).
+
+    The extent cap trades worst-case fault latency (a fault into a wide
+    extent decompresses more sibling rows) against compression ratio
+    (wider extents share one zlib stream).  Same paper-mix workload per
+    cap: fill, age + reclaim everything, then fault the whole set back
+    sequentially so every extent is paid for exactly once.
+    """
+    out = []
+    for cap in (4, 16, 64):
+        cfg = small_test_config(
+            ms_bytes=32 * 1024, mps_per_ms=32,
+            n_phys_ms=12 if smoke else 20, mpool_reserve_ms=2,
+            backend=BackendConfig(extent_max_rows=cap))
+        s = TaijiSystem(cfg)
+        space = s.guest
+        fill_system(s, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=3)
+        for _ in range(6 * cfg.lru.stabilize_scans):
+            for w in range(cfg.lru.workers):
+                s.lru.scan_shard(w, cfg.lru.workers)
+        while s.engine.reclaim_round() > 0:
+            pass
+        s.metrics.sync()
+        s.metrics.reset_fault_latency()
+        for g in range(cfg.mpool_reserve_ms, cfg.n_virt_ms):
+            req = s.reqs.lookup(g)
+            if req is None:
+                continue
+            for mp in range(cfg.mps_per_ms):
+                if req.record.is_swapped_out(mp):
+                    space.read(g, 64, off=mp * cfg.mp_bytes)
+        s.metrics.sync()
+        snap = s.metrics.fault_latency.snapshot()
+        ratio = s.metrics.compression_ratio()
+        out.append({"extent_max_rows": cap, "faults": snap["count"],
+                    "p50_us": snap["p50_us"], "p90_us": snap["p90_us"],
+                    "compression_ratio": ratio,
+                    "readahead_extents": s.metrics.readahead_extents})
+        if verbose:
+            print(f"extent_max_rows={cap:<3} p50={snap['p50_us']:.1f}us "
+                  f"p90={snap['p90_us']:.1f}us comp_ratio={ratio:.3f}")
+        s.close()
+    return out
+
+
 def rows(smoke: bool = False) -> list:
     r = run(verbose=False, smoke=smoke)
     # A/B: the locked scalar reference path (no descriptor fast path, no
@@ -275,6 +322,7 @@ def rows(smoke: bool = False) -> list:
     ref = run(n_faults=200 if smoke else 1000, verbose=False, smoke=smoke,
               fast_path=False, readahead=False)
     t = swap_throughput(smoke=smoke, verbose=False)
+    sweep = extent_sweep(smoke=smoke, verbose=False)
     zero = r["by_kind"]["zero"]
     comp = r["by_kind"]["compressed"]
     ra = r["by_kind"]["readahead"]
@@ -301,6 +349,11 @@ def rows(smoke: bool = False) -> list:
         ("swap_out_speedup", t["swap_out_speedup"], "target>=3x"),
         ("swap_in_speedup", t["swap_in_speedup"], "zlib-bound_leg"),
         ("swap_pipeline_speedup", t["swap_pipeline_speedup"], "target>=3x"),
+    ] + [
+        (f"extent_rows{sw['extent_max_rows']}_fault_p90_us", sw["p90_us"],
+         f"comp_ratio={sw['compression_ratio']:.4f}"
+         f"_faults={sw['faults']}")
+        for sw in sweep
     ]
 
 

@@ -14,11 +14,19 @@ report):
     controller failure recovery, and node recoveries. The determinism
     contract must hold across chaos too; the CI canary gates on both
     ``fleet_replay_deterministic`` and ``fleet_chaos_deterministic``.
+  * **capture** (ISSUE 5) -- traces captured from the *real*
+    elastic_kv serving loop and elastic_params expert churn through the
+    instrumented GuestSpace surface, replayed twice on a 2-node fleet:
+    the application's actual bytes are rewritten (``wdata``) and every
+    read content-verified (``rdata``). CI gates on
+    ``fleet_capture_deterministic == 1.0`` and
+    ``capture_verify_failures == 0``.
 """
 from __future__ import annotations
 
 from repro.core.config import small_test_config
-from repro.fleet import REJECT_OVERCOMMIT, chaos_trace, paper_trace
+from repro.fleet import (REJECT_OVERCOMMIT, capture_expert_churn,
+                         capture_kv_serving, chaos_trace, paper_trace)
 from repro.fleet.harness import replay_twice
 
 
@@ -106,9 +114,38 @@ def run_chaos(smoke: bool = False, verbose: bool = True) -> dict:
     return out
 
 
+def run_capture(smoke: bool = False, verbose: bool = True) -> dict:
+    """Capture real integration workloads, replay each twice on a 2-node
+    fleet: both must be byte-identical with zero content-verify misses."""
+    out = {"deterministic": 1.0, "verify_failures": 0,
+           "payload_writes": 0, "payload_reads": 0, "trace_ops": 0}
+    for cap in (capture_kv_serving(smoke=smoke),
+                capture_expert_churn(smoke=smoke)):
+        # pressure-matched replay nodes (see CapturedTrace.fleet_cfg): the
+        # 2-node fleet is as overcommitted as the capture node was
+        eq = replay_twice(cap.lines, n_nodes=2, domains=2, cfg=cap.fleet_cfg)
+        c = eq.runs[0].counters
+        out[f"{cap.name}_ops"] = cap.n_ops
+        out[f"{cap.name}_deterministic"] = 1.0 if eq.identical else 0.0
+        out["trace_ops"] += cap.n_ops
+        out["payload_writes"] += c["payload_writes"]
+        out["payload_reads"] += c["payload_reads"]
+        out["verify_failures"] += c["verify_failures"]
+        if not eq.identical:
+            out["deterministic"] = 0.0
+            out["divergence"] = f"{cap.name}: {eq.divergence}"
+        if verbose:
+            print(f"capture {cap.name}: {cap.n_ops} ops "
+                  f"(w={c['payload_writes']} r={c['payload_reads']}) "
+                  f"deterministic={eq.identical} "
+                  f"verify_failures={c['verify_failures']}")
+    return out
+
+
 def rows(smoke: bool = False) -> list:
     r = run(smoke=smoke, verbose=False)
     ch = run_chaos(smoke=smoke, verbose=False)
+    cap = run_capture(smoke=smoke, verbose=False)
     return [
         ("fleet_trace_ops", r["trace_ops"], f"nodes={r['n_nodes']}"),
         ("fleet_replay_deterministic", r["deterministic"],
@@ -135,9 +172,21 @@ def rows(smoke: bool = False) -> list:
         ("fleet_chaos_ms_lost", ch["ms_lost"],
          f"replaced={ch['ms_replaced']}"),
         ("fleet_chaos_verify_failures", ch["verify_failures"], "target=0"),
+        # captured serving workloads (ISSUE 5): real elastic_kv /
+        # elastic_params traffic recorded at the GuestSpace layer and
+        # replayed on a 2-node fleet with content verification
+        ("fleet_capture_trace_ops", cap["trace_ops"],
+         f"kv={cap['kv_serving_ops']}_expert={cap['expert_churn_ops']}"),
+        ("fleet_capture_deterministic", cap["deterministic"],
+         "kv+expert_byte-identical"),
+        ("fleet_capture_payload_ops",
+         cap["payload_writes"] + cap["payload_reads"],
+         f"writes={cap['payload_writes']}_reads={cap['payload_reads']}"),
+        ("capture_verify_failures", cap["verify_failures"], "target=0"),
     ]
 
 
 if __name__ == "__main__":
     run()
     run_chaos()
+    run_capture()

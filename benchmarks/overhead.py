@@ -51,17 +51,17 @@ def run(verbose: bool = True) -> dict:
 
     # (b) host access path: direct numpy vs block-table translation
     s = TaijiSystem(small_test_config())
-    g = s.guest_alloc_ms()
+    space = s.guest
+    g = space.alloc_ms()
     n = 20000
     buf = s.phys.ms_view(int(s.virt.table.pfn[g]))
     t0 = time.perf_counter()
     for _ in range(n):
         bytes(buf[:64])
     t_direct = (time.perf_counter() - t0) / n
-    addr = s.ms_addr(g)
     t0 = time.perf_counter()
     for _ in range(n):
-        s.read(addr, 64)
+        space.read(g, 64)
     t_translated = (time.perf_counter() - t0) / n
     s.close()
 

@@ -36,10 +36,11 @@ def fill_system(system, n_ms: int, seed: int = 0):
 
     Returns {gfn: data} for later verification."""
     rng = np.random.default_rng(seed)
+    space = system.guest
     payload = {}
     for _ in range(n_ms):
-        g = system.guest_alloc_ms()
+        g = space.alloc_ms()
         data = paper_mix_ms(rng, system.cfg.ms_bytes, system.cfg.mps_per_ms)
-        system.write(system.ms_addr(g), data)
+        space.write(g, data)
         payload[g] = data
     return payload

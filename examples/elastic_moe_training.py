@@ -43,7 +43,10 @@ def main() -> None:
         e_bytes * 3 + 64, m.n_routed // 2, m.n_routed,
         lru=LRUConfig(scan_interval_s=0.002, workers=1, stabilize_scans=1))
     system = TaijiSystem(tcfg)
-    cache = ElasticExpertCache(system, m.n_routed,
+    # the GuestSpace is the sanctioned surface: every expert read/write
+    # below goes through typed MS views on it (attach a TraceRecorder
+    # here to capture the churn as a replayable fleet trace)
+    cache = ElasticExpertCache(system.guest, m.n_routed,
                                (3, *e_shape), dtype=np.float32)
 
     def expert_weights(params, eid):

@@ -8,7 +8,12 @@ policy swaps their KV blocks to the zero/compressed backend, and each
 scheduled batch pins + faults its blocks back in before decoding (the DMA
 contract). Halfway through, the swap engine is HOT-UPGRADED v1 -> v2
 under load -- serving never stops (paper §4.4).
+
+All guest memory flows through the system's GuestSpace (the sanctioned
+surface); pass ``--capture trace.tsv`` to attach a TraceRecorder and
+write the serving workload as a replayable fleet trace.
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -25,6 +30,11 @@ from repro.models import model as M
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--capture", metavar="PATH", default=None,
+                    help="record the serving workload as a replayable "
+                         "fleet trace (TSV) at PATH")
+    args = ap.parse_args()
     cfg = reduced_config("qwen3-4b")
     geom = KVGeometry(n_layers=M.attn_layer_count(cfg),
                       kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
@@ -37,8 +47,13 @@ def main() -> None:
         lru=LRUConfig(scan_interval_s=0.002, workers=2, stabilize_scans=1),
         scheduler=SchedulerConfig(cycle_ms=2.0, shards=2))
     system = TaijiSystem(tcfg)
+    space = system.guest                     # the one guest-memory surface
+    recorder = None
+    if args.capture:
+        from repro.fleet.trace import TraceRecorder
+        recorder = space.attach(TraceRecorder.for_space(space))
     system.start_background()
-    cache = ElasticKVCache(geom, system)
+    cache = ElasticKVCache(geom, space)
 
     entry = EntryOps()
     install_module(system, entry, EngineModule(system))
@@ -88,6 +103,10 @@ def main() -> None:
     print("\nfault latency:", st["fault_latency"])
     print(f"swapped out {st['ms_swapped_out']} MSes; compression ratio "
           f"{st['compression_ratio']:.3f}; module v{entry.call('version')}")
+    if recorder is not None:
+        recorder.write(args.capture)
+        print(f"captured {recorder.n_ops} trace ops -> {args.capture} "
+              f"(replay with repro.fleet.harness.replay)")
     system.close()
 
 

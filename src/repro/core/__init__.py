@@ -5,6 +5,7 @@ Layering (bottom up):
   -> ms/req (records + concurrency) -> backend -> lru -> watermark
   -> swap (engine) -> scheduler (hv_sched) -> system (facade)
   -> hotswitch / hotupgrade -> dma
+  -> guest (GuestSpace: the one sanctioned guest-memory surface)
   -> elastic_kv / elastic_params (framework integrations)
 """
 from .config import (ABI_VERSION, BackendConfig, LRUConfig, SchedulerConfig,
@@ -12,6 +13,7 @@ from .config import (ABI_VERSION, BackendConfig, LRUConfig, SchedulerConfig,
 from .errors import (ABIMismatchError, CorruptionError, InvalidStateError,
                      MpoolExhaustedError, OutOfMemoryError, PinnedError,
                      TaijiError)
+from .guest import GuestObserver, GuestSpace, MSView
 from .system import TaijiSystem
 from .hotswitch import PlainMemorySystem, hot_switch
 from .hotupgrade import EngineModule, EngineModuleV2, EntryOps, hot_upgrade, install_module
@@ -21,6 +23,7 @@ __all__ = [
     "TaijiConfig", "WatermarkConfig", "small_test_config",
     "TaijiError", "OutOfMemoryError", "MpoolExhaustedError",
     "CorruptionError", "PinnedError", "ABIMismatchError", "InvalidStateError",
+    "GuestObserver", "GuestSpace", "MSView",
     "TaijiSystem", "PlainMemorySystem", "hot_switch",
     "EntryOps", "EngineModule", "EngineModuleV2", "install_module", "hot_upgrade",
 ]

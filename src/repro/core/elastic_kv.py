@@ -17,6 +17,11 @@ memory. Taiji makes that reservation elastic:
     paged-attention kernel (kernels/paged_attention.py) -- the EPT walk on
     the I/O path.
 
+All guest memory flows through one :class:`~.guest.GuestSpace` (the
+sanctioned surface), so attaching a ``TraceRecorder`` to the space turns
+a live serving workload into a replayable fleet trace with zero cache
+changes.
+
 Beyond-paper: ``prefetch_async`` overlaps the next batch's swap-ins with
 the current step (double buffering), recorded in EXPERIMENTS.md §Perf.
 """
@@ -24,11 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from .config import TaijiConfig
+from .guest import GuestSpace
 from .system import TaijiSystem
 
 
@@ -80,12 +86,40 @@ def make_kv_taiji_config(geom: KVGeometry, n_phys_blocks: int,
     return TaijiConfig(**base)
 
 
-class ElasticKVCache:
-    """Host-side elastic KV block store for a serving node."""
+class _PrefetchThread(threading.Thread):
+    """Prefetch worker whose failures surface instead of dying silently:
+    the exception is stored on the thread object and re-raised on
+    ``join()`` (once the worker has actually finished)."""
 
-    def __init__(self, geom: KVGeometry, system: TaijiSystem) -> None:
+    def __init__(self, **kw) -> None:
+        super().__init__(**kw)
+        self.exc: Optional[BaseException] = None
+
+    def run(self) -> None:
+        try:
+            super().run()
+        except BaseException as e:      # noqa: BLE001 - surfaced on join
+            self.exc = e
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        super().join(timeout)
+        if self.exc is not None and not self.is_alive():
+            raise self.exc
+
+
+class ElasticKVCache:
+    """Host-side elastic KV block store for a serving node.
+
+    Accepts either a :class:`GuestSpace` or a :class:`TaijiSystem` (its
+    canonical ``.guest`` space is used), so capture/policy observers
+    attached to the space see every cache operation.
+    """
+
+    def __init__(self, geom: KVGeometry,
+                 space: Union[GuestSpace, TaijiSystem]) -> None:
         self.geom = geom
-        self.system = system
+        self.space = space.guest if isinstance(space, TaijiSystem) else space
+        self.system = self.space.system      # telemetry / legacy accessors
         self._lock = threading.Lock()
         # seq_id -> list of gfns (one per block) and token count
         self._blocks: Dict[int, List[int]] = {}
@@ -104,7 +138,7 @@ class ElasticKVCache:
             gfns = self._blocks.pop(seq_id, [])
             self._tokens.pop(seq_id, None)
         for gfn in gfns:
-            self.system.guest_free_ms(gfn)
+            self.space.free_ms(gfn)
 
     def seq_len(self, seq_id: int) -> int:
         return self._tokens[seq_id]
@@ -125,13 +159,11 @@ class ElasticKVCache:
             blocks = self._blocks[seq_id]
         slot = t % g.block_tokens
         if slot == 0:                      # new block needed
-            gfn = self.system.guest_alloc_ms()
+            gfn = self.space.alloc_ms()
             with self._lock:
                 blocks.append(gfn)
         gfn = blocks[t // g.block_tokens]
-        token_bytes = raw.nbytes
-        addr = self.system.ms_addr(gfn) + slot * token_bytes
-        self.system.write(addr, raw.tobytes())
+        self.space.write(gfn, raw.tobytes(), off=slot * raw.nbytes)
         with self._lock:
             self._tokens[seq_id] = t + 1
 
@@ -140,10 +172,10 @@ class ElasticKVCache:
         """Read one block back as [block_tokens, n_layers, 2, kv_heads, head_dim]."""
         g = self.geom
         gfn = self._blocks[seq_id][block_idx]
-        raw = self.system.read(self.system.ms_addr(gfn), g.block_bytes)
         dt = np.float16 if g.dtype_bytes == 2 else np.float32
-        return np.frombuffer(raw, dtype=dt).reshape(
-            g.block_tokens, g.n_layers, 2, g.kv_heads, g.head_dim)
+        return self.space.view(
+            gfn, dt, (g.block_tokens, g.n_layers, 2, g.kv_heads, g.head_dim)
+        ).load()
 
     # ------------------------------------------------------------- stepping
     def prepare_step(self, seq_ids: Sequence[int]):
@@ -157,37 +189,38 @@ class ElasticKVCache:
         with self._lock:
             for sid in seq_ids:
                 gfns.extend(self._blocks[sid])
-        return self.system.dma.pin_for_step(gfns)
+        return self.space.pin(gfns)
 
     def prefetch_async(self, seq_ids: Sequence[int]) -> threading.Thread:
-        """Beyond-paper: overlap next batch's swap-ins with the current step."""
+        """Beyond-paper: overlap next batch's swap-ins with the current step.
+
+        Returns the worker thread; a failure inside the worker is stored
+        on it and re-raised by ``join()`` rather than vanishing with the
+        daemon thread.
+        """
         with self._lock:
             gfns = [g for sid in seq_ids for g in self._blocks.get(sid, [])]
+        system = self.space.system
 
         def work() -> None:
             for gfn in gfns:
                 # opportunistic: never compete with the pinned in-flight
                 # step for the last free slots
-                if self.system.phys.free_count <= self.system.watermark.low_ms:
+                if system.phys.free_count <= system.watermark.low_ms:
                     return
-                req = self.system.reqs.lookup(gfn)
+                req = system.reqs.lookup(gfn)
                 if req is not None and req.record.swapped_out_count() > 0:
-                    self.system.engine.swap_in_ms(gfn)
+                    system.engine.swap_in_ms(gfn)
 
-        th = threading.Thread(target=work, name="kv-prefetch", daemon=True)
+        th = _PrefetchThread(target=work, name="kv-prefetch", daemon=True)
         th.start()
         return th
 
     # ------------------------------------------------------------ telemetry
     def residency(self) -> Dict[str, int]:
-        from .virt import NO_PFN
-        resident = swapped = 0
         with self._lock:
             all_gfns = [g for bl in self._blocks.values() for g in bl]
-        for g in all_gfns:
-            if int(self.system.virt.table.pfn[g]) != NO_PFN:
-                resident += 1
-            else:
-                swapped += 1
-        return {"resident_blocks": resident, "swapped_blocks": swapped,
-                "total_blocks": resident + swapped}
+        res = self.space.residency(all_gfns)
+        return {"resident_blocks": res["resident"],
+                "swapped_blocks": res["swapped"],
+                "total_blocks": res["total"]}

@@ -8,17 +8,23 @@ routed experts cool down and get compressed out; a scheduled batch whose
 router activates a swapped expert faults it back in before dispatch (the
 DMA contract again).
 
+Every expert lives behind a typed :class:`~.guest.MSView` on the one
+sanctioned :class:`~.guest.GuestSpace` surface, so weight reads/writes
+are shape-checked and capture observers see expert churn as a replayable
+workload.
+
 Inapplicable to dense architectures -- noted in DESIGN.md
 §Arch-applicability; dense archs run without this feature.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, List, Sequence, Union
 
 import numpy as np
 
 from .config import TaijiConfig
+from .guest import GuestSpace, MSView
 from .system import TaijiSystem
 
 
@@ -46,65 +52,70 @@ def make_expert_taiji_config(expert_bytes: int, n_hot_experts: int,
 
 
 class ElasticExpertCache:
-    """Host-side elastic store for per-expert weights of one MoE layer."""
+    """Host-side elastic store for per-expert weights of one MoE layer.
 
-    def __init__(self, system: TaijiSystem, n_experts: int,
+    Accepts either a :class:`GuestSpace` or a :class:`TaijiSystem` (its
+    canonical ``.guest`` space is used).
+    """
+
+    def __init__(self, space: Union[GuestSpace, TaijiSystem], n_experts: int,
                  expert_shape: tuple, dtype=np.float32) -> None:
-        self.system = system
+        self.space = space.guest if isinstance(space, TaijiSystem) else space
+        self.system = self.space.system      # telemetry / legacy accessors
         self.n_experts = n_experts
-        self.expert_shape = expert_shape
+        self.expert_shape = tuple(expert_shape)
         self.dtype = np.dtype(dtype)
         nbytes = int(np.prod(expert_shape)) * self.dtype.itemsize
-        if nbytes > system.cfg.ms_bytes:
-            raise ValueError(f"expert ({nbytes}B) exceeds MS ({system.cfg.ms_bytes}B)")
+        if nbytes > self.space.cfg.ms_bytes:
+            raise ValueError(
+                f"expert ({nbytes}B) exceeds MS ({self.space.cfg.ms_bytes}B)")
         self._lock = threading.Lock()
-        self._gfn: Dict[int, int] = {}
+        self._view: Dict[int, MSView] = {}    # eid -> typed view of its MS
         self.route_counts = np.zeros(n_experts, dtype=np.int64)
+
+    def _view_of(self, eid: int, create: bool = False) -> MSView:
+        with self._lock:
+            view = self._view.get(eid)
+            if view is None:
+                if not create:
+                    raise KeyError(eid)
+                gfn = self.space.alloc_ms()
+                view = self.space.view(gfn, self.dtype, self.expert_shape)
+                self._view[eid] = view
+        return view
 
     # ------------------------------------------------------------- weights
     def put_expert(self, eid: int, weights: np.ndarray) -> None:
         if weights.shape != self.expert_shape:
             raise ValueError("bad expert shape")
-        with self._lock:
-            gfn = self._gfn.get(eid)
-            if gfn is None:
-                gfn = self.system.guest_alloc_ms()
-                self._gfn[eid] = gfn
-        self.system.write(self.system.ms_addr(gfn),
-                          weights.astype(self.dtype).tobytes())
+        self._view_of(eid, create=True).store(weights)
 
     def get_expert(self, eid: int) -> np.ndarray:
-        with self._lock:
-            gfn = self._gfn[eid]
-        nbytes = int(np.prod(self.expert_shape)) * self.dtype.itemsize
-        raw = self.system.read(self.system.ms_addr(gfn), nbytes)
-        return np.frombuffer(raw, dtype=self.dtype).reshape(self.expert_shape)
+        return self._view_of(eid).load()
 
     # ------------------------------------------------------------- routing
     def note_routing(self, expert_ids: Iterable[int]) -> None:
         """Report the router's choices: marks those experts accessed."""
+        gfns = []
         for eid in set(expert_ids):
             self.route_counts[eid] += 1
             with self._lock:
-                gfn = self._gfn.get(eid)
-            if gfn is not None:
-                self.system.virt.table.mark_accessed(gfn)
+                view = self._view.get(eid)
+            if view is not None:
+                gfns.append(view.gfn)
+        self.space.hint_accessed(gfns)
 
     def prepare_dispatch(self, active_experts: Sequence[int]):
         """Swap in + pin the experts the scheduled batch activates."""
         with self._lock:
-            gfns = [self._gfn[e] for e in active_experts if e in self._gfn]
-        return self.system.dma.pin_for_step(gfns)
+            gfns = [self._view[e].gfn for e in active_experts
+                    if e in self._view]
+        return self.space.pin(gfns)
 
     # ------------------------------------------------------------ telemetry
     def residency(self) -> Dict[str, int]:
-        from .virt import NO_PFN
-        resident = swapped = 0
         with self._lock:
-            gfns = list(self._gfn.values())
-        for g in gfns:
-            if int(self.system.virt.table.pfn[g]) != NO_PFN:
-                resident += 1
-            else:
-                swapped += 1
-        return {"resident_experts": resident, "swapped_experts": swapped}
+            gfns = [v.gfn for v in self._view.values()]
+        res = self.space.residency(gfns)
+        return {"resident_experts": res["resident"],
+                "swapped_experts": res["swapped"]}

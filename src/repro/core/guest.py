@@ -1,0 +1,262 @@
+"""GuestSpace -- the one sanctioned guest-memory surface.
+
+Taiji's promise is elasticity that is transparent to upper-layer
+applications, but transparency only composes if every upper layer talks
+to the same surface. Before this module, `ElasticKVCache`,
+`ElasticExpertCache` and the fleet `NodeAgent` each drove
+``TaijiSystem.read/write/ms_addr/guest_alloc_ms`` through their own glue,
+so cross-cutting concerns (workload capture, verification, per-tenant
+accounting, policy hooks) had no seam to hook.  ``GuestSpace`` is that
+seam -- tracehm records at the access layer for the same reason: one
+well-placed indirection layer owns everything that wants to see guest
+accesses.
+
+The API is gfn-relative (an MS handle plus an offset) rather than raw
+guest-virtual addresses: callers never do address arithmetic, and every
+access is bounds-checked against one MS.  Raw-GVA entry points
+(``read_gva``/``write_gva``) exist for the ``TaijiSystem`` deprecation
+shims and for code that already holds a packed address.
+
+Observers (:class:`GuestObserver`) see every alloc/free/access/tick.
+``repro.fleet.trace.TraceRecorder`` is the flagship observer: it turns a
+live serving workload into a replayable fleet trace (see
+``repro.fleet.capture``).  The observer list is almost always empty, so
+the hot path pays one truthiness check.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .virt import NO_PFN
+
+
+class GuestObserver:
+    """Protocol for guest-memory event observers (no-op base class).
+
+    ``on_access`` fires after the access succeeded; ``data`` carries the
+    bytes written (writes), the bytes returned (reads), or ``None`` for
+    zero-length residency hints (batched touch / pin).
+    """
+
+    def on_alloc(self, gfn: int) -> None:  # pragma: no cover - no-op base
+        pass
+
+    def on_free(self, gfn: int) -> None:  # pragma: no cover - no-op base
+        pass
+
+    def on_access(self, gfn: int, off: int, nbytes: int, is_write: bool,
+                  data: Optional[bytes] = None) -> None:  # pragma: no cover
+        pass
+
+    def on_tick(self, rounds: int) -> None:  # pragma: no cover - no-op base
+        pass
+
+
+class MSView:
+    """Typed window onto one MS: a dtype/shape bound to (gfn, offset).
+
+    Guest memory is elastic -- the backing frame can be swapped out and
+    faulted back between accesses -- so a view cannot hand out a live
+    ndarray.  ``load()`` reads (faulting as needed) and ``store()``
+    writes, both through the instrumented GuestSpace path.
+    """
+
+    __slots__ = ("space", "gfn", "dtype", "shape", "off", "nbytes")
+
+    def __init__(self, space: "GuestSpace", gfn: int, dtype, shape,
+                 off: int = 0) -> None:
+        self.space = space
+        self.gfn = gfn
+        self.dtype = np.dtype(dtype)
+        self.shape = tuple(shape)
+        self.off = off
+        self.nbytes = int(np.prod(self.shape)) * self.dtype.itemsize
+        if off < 0 or off + self.nbytes > space.cfg.ms_bytes:
+            raise ValueError(
+                f"view [{off}, {off + self.nbytes}) exceeds MS "
+                f"({space.cfg.ms_bytes} bytes)")
+
+    def load(self) -> np.ndarray:
+        raw = self.space.read(self.gfn, self.nbytes, off=self.off)
+        return np.frombuffer(raw, dtype=self.dtype).reshape(self.shape)
+
+    def store(self, arr: np.ndarray) -> None:
+        if tuple(arr.shape) != self.shape:
+            raise ValueError(f"array shape {arr.shape} != view {self.shape}")
+        arr = np.ascontiguousarray(arr, dtype=self.dtype)
+        self.space.write(self.gfn, arr.tobytes(), off=self.off)
+
+
+class GuestSpace:
+    """The guest-facing elastic-memory API over one :class:`TaijiSystem`.
+
+    alloc/free, bounds-checked read/write, typed per-MS views, batched
+    touch and pin residency hints -- with an observer protocol so capture
+    and policy layers see every operation without per-caller glue.
+    ``TaijiSystem.guest`` returns the canonical instance for a system.
+    """
+
+    def __init__(self, system, observers: Sequence[GuestObserver] = ()) -> None:
+        self.system = system
+        self.cfg = system.cfg
+        self._observers: List[GuestObserver] = list(observers)
+        # hot-path caches: read/write sit on benchmarked access paths, so
+        # pay plain locals instead of attribute chains per call
+        self._ms_bytes = system.cfg.ms_bytes
+        self._guest_read = system.virt.guest_read
+        self._guest_write = system.virt.guest_write
+
+    # ------------------------------------------------------------ observers
+    def attach(self, observer: GuestObserver) -> GuestObserver:
+        self._observers.append(observer)
+        return observer
+
+    def detach(self, observer: GuestObserver) -> None:
+        self._observers.remove(observer)
+
+    # ----------------------------------------------------------- alloc/free
+    def alloc_ms(self) -> int:
+        """Allocate one elastic MS (may trigger reclaim); returns its gfn."""
+        gfn = self.system.guest_alloc_ms()
+        for obs in self._observers:
+            obs.on_alloc(gfn)
+        return gfn
+
+    def free_ms(self, gfn: int) -> None:
+        self.system.guest_free_ms(gfn)
+        for obs in self._observers:
+            obs.on_free(gfn)
+
+    # ----------------------------------------------------------- addressing
+    def addr_of(self, gfn: int, mp: int = 0, off: int = 0) -> int:
+        """Packed guest-virtual address of (gfn, mp, off)."""
+        return gfn * self.cfg.ms_bytes + mp * self.cfg.mp_bytes + off
+
+    # ------------------------------------------------------------------ I/O
+    def write(self, gfn: int, data: bytes, off: int = 0) -> None:
+        """Write ``data`` at ``off`` within one MS (may span MPs)."""
+        ms_bytes = self._ms_bytes
+        nbytes = len(data)
+        # off == ms_bytes would resolve (and fault!) the *next* MS even
+        # for a zero-length access, so the offset itself must be in-MS
+        if off < 0 or off >= ms_bytes or off + nbytes > ms_bytes:
+            raise ValueError(
+                f"write [{off}, {off + nbytes}) exceeds MS "
+                f"({ms_bytes} bytes)")
+        self._guest_write(gfn * ms_bytes + off, data)
+        if self._observers:
+            data = bytes(data)
+            for obs in self._observers:
+                obs.on_access(gfn, off, nbytes, True, data)
+
+    def read(self, gfn: int, nbytes: Optional[int] = None,
+             off: int = 0) -> bytes:
+        """Read ``nbytes`` at ``off`` within one MS (default: to MS end),
+        faulting swapped MPs back in."""
+        ms_bytes = self._ms_bytes
+        if nbytes is None:
+            nbytes = ms_bytes - off
+        if off < 0 or off >= ms_bytes or nbytes < 0 or off + nbytes > ms_bytes:
+            raise ValueError(
+                f"read [{off}, {off + nbytes}) exceeds MS "
+                f"({ms_bytes} bytes)")
+        data = self._guest_read(gfn * ms_bytes + off, nbytes)
+        if self._observers:
+            for obs in self._observers:
+                obs.on_access(gfn, off, nbytes, False, data)
+        return data
+
+    # raw-GVA entry points (deprecation shims, packed-address callers)
+    def write_gva(self, gva: int, data: bytes) -> None:
+        gfn, off = divmod(gva, self._ms_bytes)
+        self.write(gfn, data, off=off)
+
+    def read_gva(self, gva: int, nbytes: int) -> bytes:
+        gfn, off = divmod(gva, self._ms_bytes)
+        return self.read(gfn, nbytes, off=off)
+
+    # ---------------------------------------------------------- typed views
+    def view(self, gfn: int, dtype, shape, off: int = 0) -> MSView:
+        """Typed per-MS view: ``view(...).load()/store(arr)``."""
+        return MSView(self, gfn, dtype, shape, off=off)
+
+    # ------------------------------------------------- residency / pin hints
+    def touch(self, gfns: Iterable[int], *, mark_accessed: bool = True) -> int:
+        """Batched residency hint: swap each MS's cold MPs back in and mark
+        it accessed.  Returns how many MSs actually needed a swap-in.
+        Observers see one zero-length access per MS (a ``touch`` op in a
+        captured trace), so replays reproduce the faulting pattern."""
+        table = self.system.virt.table
+        faulted = 0
+        gfns = list(gfns)
+        for gfn in gfns:
+            req = self.system.reqs.lookup(gfn)
+            if ((req is not None and req.record.swapped_out_count() > 0)
+                    or int(table.pfn[gfn]) == NO_PFN):
+                self.system.engine.swap_in_ms(gfn)
+                faulted += 1
+            if mark_accessed:
+                table.mark_accessed(gfn)
+        self._notify_touch(gfns)
+        return faulted
+
+    def hint_accessed(self, gfns: Iterable[int]) -> None:
+        """Mark MSs hot for the LRU without faulting anything in (e.g. a
+        router reporting which experts a batch activates)."""
+        table = self.system.virt.table
+        gfns = list(gfns)
+        for gfn in gfns:
+            table.mark_accessed(gfn)
+        self._notify_touch(gfns)
+
+    @contextmanager
+    def pin(self, gfns: Iterable[int]):
+        """Swap in + pin a working set for one in-flight step (the DMA
+        no-retry contract); unpins on exit."""
+        gfns = list(gfns)
+        self._notify_touch(gfns)
+        with self.system.dma.pin_for_step(gfns):
+            yield
+
+    def _notify_touch(self, gfns: Sequence[int]) -> None:
+        if self._observers:
+            for gfn in gfns:
+                for obs in self._observers:
+                    obs.on_access(gfn, 0, 0, False, None)
+
+    def residency(self, gfns: Optional[Iterable[int]] = None) -> Dict[str, int]:
+        """Resident/swapped MS counts over ``gfns`` (default: every
+        guest-allocatable MS with a req record or a frame)."""
+        table = self.system.virt.table
+        if gfns is None:
+            gfns = range(self.cfg.mpool_reserve_ms, self.cfg.n_virt_ms)
+            resident = swapped = 0
+            for gfn in gfns:
+                if int(table.pfn[gfn]) != NO_PFN:
+                    resident += 1
+                elif self.system.reqs.lookup(gfn) is not None:
+                    swapped += 1
+        else:
+            resident = swapped = 0
+            for gfn in gfns:
+                if int(table.pfn[gfn]) != NO_PFN:
+                    resident += 1
+                else:
+                    swapped += 1
+        return {"resident": resident, "swapped": swapped,
+                "total": resident + swapped}
+
+    # ------------------------------------------------------------ background
+    def step_background(self, rounds: int = 1, *, reclaim: bool = True) -> int:
+        """Run deterministic background rounds (LRU scans + reclaim) and
+        tell observers -- captured traces carry the tick so replays age
+        and reclaim at the same workload points.  Returns MPs reclaimed."""
+        reclaimed = 0
+        for _ in range(rounds):
+            reclaimed += self.system.step_background(reclaim=reclaim)
+        for obs in self._observers:
+            obs.on_tick(rounds)
+        return reclaimed

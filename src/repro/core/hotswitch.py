@@ -106,10 +106,10 @@ class VirtAccessor(MemoryAccessor):
         self.system = system
 
     def read(self, gva: int, n: int) -> bytes:
-        return self.system.read(gva, n)
+        return self.system.guest.read_gva(gva, n)
 
     def write(self, gva: int, data: bytes) -> None:
-        self.system.write(gva, data)
+        self.system.guest.write_gva(gva, data)
 
 
 def hot_switch(plain: PlainMemorySystem,

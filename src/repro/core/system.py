@@ -9,6 +9,7 @@ and what the framework integrations (elastic_kv / elastic_params) drive.
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -18,6 +19,7 @@ from .backend import BackendStore
 from .config import TaijiConfig
 from .dma import DMARegistry
 from .errors import InvalidStateError
+from .guest import GuestSpace
 from .lru import MultiLevelLRU
 from .metrics import Metrics
 from .mpool import Mpool
@@ -25,6 +27,11 @@ from .req import ReqTree
 from .swap import SwapEngine
 from .virt import NO_PFN, PhysicalMemory, VirtualizationLayer
 from .watermark import WatermarkPolicy
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
 class TaijiSystem:
@@ -50,6 +57,16 @@ class TaijiSystem:
             range(cfg.n_virt_ms - 1, cfg.mpool_reserve_ms - 1, -1))
         self._background_started = False
         self.module_version = 1          # bumped by hot upgrades
+        self._guest: Optional[GuestSpace] = None
+
+    @property
+    def guest(self) -> GuestSpace:
+        """The canonical :class:`~.guest.GuestSpace` for this system --
+        the one sanctioned guest-memory surface.  Lazily created so every
+        caller (integrations, fleet, shims) shares one observer list."""
+        if self._guest is None:
+            self._guest = GuestSpace(self)
+        return self._guest
 
     # ---------------------------------------------------------- guest alloc
     def guest_alloc_ms(self) -> int:
@@ -161,15 +178,25 @@ class TaijiSystem:
             self.engine.swap_out_mps(gfn, swapped)
         return gfn
 
-    # ----------------------------------------------------------- guest I/O
+    # ------------------------------------------- guest I/O (deprecated shims)
+    # The sanctioned surface is ``self.guest`` (repro.core.guest.GuestSpace);
+    # these shims stay byte-equivalent by delegating through it, so
+    # observers attached to the canonical GuestSpace still see shimmed
+    # accesses (tests/test_guest_api.py pins both properties).
     def write(self, gva: int, data: bytes) -> None:
-        self.virt.guest_write(gva, data)
+        _warn_deprecated("TaijiSystem.write(gva, data)",
+                         "TaijiSystem.guest.write(gfn, data, off=...)")
+        self.guest.write_gva(gva, data)
 
     def read(self, gva: int, nbytes: int) -> bytes:
-        return self.virt.guest_read(gva, nbytes)
+        _warn_deprecated("TaijiSystem.read(gva, nbytes)",
+                         "TaijiSystem.guest.read(gfn, nbytes, off=...)")
+        return self.guest.read_gva(gva, nbytes)
 
     def ms_addr(self, gfn: int, mp: int = 0, off: int = 0) -> int:
-        return gfn * self.cfg.ms_bytes + mp * self.cfg.mp_bytes + off
+        _warn_deprecated("TaijiSystem.ms_addr(gfn, mp, off)",
+                         "TaijiSystem.guest.addr_of(gfn, mp, off)")
+        return self.guest.addr_of(gfn, mp, off)
 
     # ------------------------------------------------------------ background
     def start_background(self) -> None:

@@ -65,6 +65,23 @@ class FleetConfig:
     latency_guard_factor: Optional[float] = None
     latency_guard_min_samples: int = 200
 
+    @classmethod
+    def production_profile(cls) -> "FleetConfig":
+        """The named production rollout profile (ROADMAP wiring item).
+
+        Wires the optional latency guard into abort-on-regression: a
+        rollout batch whose post-upgrade fleet p90 fault latency exceeds
+        1.5x the pre-rollout baseline aborts, judged only on a deep
+        sample window (500 faults) so one noisy probe cannot kill a
+        rollout.  Reclaim stagger widens to 4 groups and drains deepen --
+        production trades rollout speed for blast-radius control.
+        """
+        return cls(overcommit_cap=1.25,
+                   reclaim_stagger_groups=4,
+                   upgrade_drain_rounds=3,
+                   latency_guard_factor=1.5,
+                   latency_guard_min_samples=500)
+
 
 class _RollingUpgrade:
     def __init__(self, module_cls: Type[EngineModule],

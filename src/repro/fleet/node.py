@@ -66,8 +66,11 @@ class NodeAgent:
     def _boot(self) -> None:
         """Fresh system bring-up, shared by __init__ and recover() so a
         recovered node boots exactly like a new one (GA module installed
-        through the entry table)."""
+        through the entry table).  Guest traffic goes through the node's
+        canonical GuestSpace -- the one sanctioned surface -- so fleet
+        replays hit the same instrumented path as the integrations."""
         self.system = TaijiSystem(self.cfg)
+        self.space = self.system.guest
         self.entry = EntryOps()
         install_module(self.system, self.entry, EngineModule(self.system))
 
@@ -142,24 +145,32 @@ class NodeAgent:
     # -------------------------------------------------------- guest traffic
     def alloc_ms(self) -> int:
         self._check_serving()
-        gfn = self.system.guest_alloc_ms()
+        gfn = self.space.alloc_ms()
         self.allocated.add(gfn)
         return gfn
 
     def free_ms_gfn(self, gfn: int) -> None:
         self._check_serving()
-        self.system.guest_free_ms(gfn)
+        self.space.free_ms(gfn)
         self.allocated.discard(gfn)
 
     def write_mp(self, gfn: int, mp: int, data: bytes) -> None:
-        self._check_serving()
-        self.system.write(self.system.ms_addr(gfn, mp=mp), data)
+        self.write_at(gfn, mp * self.cfg.mp_bytes, data)
 
     def read_mp(self, gfn: int, mp: int,
                 nbytes: Optional[int] = None) -> bytes:
-        self._check_serving()
         n = self.cfg.mp_bytes if nbytes is None else nbytes
-        return self.system.read(self.system.ms_addr(gfn, mp=mp), n)
+        return self.read_at(gfn, mp * self.cfg.mp_bytes, n)
+
+    def write_at(self, gfn: int, off: int, data: bytes) -> None:
+        """Byte-granular guest write (captured-trace payload replay)."""
+        self._check_serving()
+        self.space.write(gfn, data, off=off)
+
+    def read_at(self, gfn: int, off: int, nbytes: int) -> bytes:
+        """Byte-granular guest read (captured-trace read-verify)."""
+        self._check_serving()
+        return self.space.read(gfn, nbytes, off=off)
 
     # --------------------------------------------------- migration (control)
     def export_ms(self, gfn: int):

@@ -31,6 +31,21 @@ Columns are ``seq, op, ms/addr, is_write``:
   * ``migrate``-- live-migrate MS token ``arg`` to the least-pressured
     other node (controller placement, read-verified).
 
+Captured application workloads (ISSUE 5) add two *payload* ops with a
+fifth column:
+
+    7	wdata	0x30880	1	eJzLSM3JyQcABiwCFQ==
+    8	rdata	0x30880	0	64:9c2e5a31
+
+  * ``wdata`` -- a real guest write captured at the access layer
+    (:class:`TraceRecorder` on a ``GuestSpace``); the column carries the
+    actual bytes (zlib+base64), so replays rewrite the application's
+    data -- real KV blocks, expert weights -- byte-identically instead
+    of deriving pages from the header seed.
+  * ``rdata`` -- a captured guest read; the column carries
+    ``nbytes:crc32`` of what the application saw, so every replayed read
+    is verified against the capture-time content.
+
 Everything is seeded and single-threaded (round-based), so replaying the
 same trace twice yields byte-identical deterministic snapshots -- the
 failure schedule is part of the trace, so chaos replays deterministically
@@ -38,12 +53,17 @@ too.
 """
 from __future__ import annotations
 
+import base64
+import binascii
 import json
 import random
+import threading
 import zlib
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
+
+from ..core.guest import GuestObserver
 
 TRACE_MAGIC = "taiji-trace v1"
 
@@ -57,6 +77,12 @@ OP_UPGRADE = "upgrade"
 OP_KILL = "kill"          # arg node_id; is_write=1 -> drained (graceful)
 OP_RECOVER = "recover"    # arg node_id
 OP_MIGRATE = "migrate"    # arg MS token; controller picks the destination
+# captured-workload payload ops (ISSUE 5): column 5 carries content
+OP_WDATA = "wdata"        # arg byte addr; payload = zlib+base64 bytes
+OP_RDATA = "rdata"        # arg byte addr; payload = "nbytes:crc32hex"
+
+PAYLOAD_OPS = frozenset((OP_WDATA, OP_RDATA))
+_HEX_OPS = frozenset((OP_TOUCH, OP_WDATA, OP_RDATA))
 
 # paper Fig 15c production mix: 76.79% zero pages, 23.21% compressed at
 # ~47.63% ratio. The generator defaults add an incompressible tail so the
@@ -144,19 +170,33 @@ class TraceHeader:
             raise ValueError(f"malformed trace header {line!r}: {e}") from None
 
 
-def format_line(seq: int, op: str, arg: int, is_write: int) -> str:
-    if op == OP_TOUCH:
-        return f"{seq}\t{op}\t0x{arg:x}\t{is_write}"
-    return f"{seq}\t{op}\t{arg}\t{is_write}"
+def format_line(seq: int, op: str, arg: int, is_write: int,
+                payload: str = "") -> str:
+    arg_s = f"0x{arg:x}" if op in _HEX_OPS else str(arg)
+    if op in PAYLOAD_OPS:
+        return f"{seq}\t{op}\t{arg_s}\t{is_write}\t{payload}"
+    return f"{seq}\t{op}\t{arg_s}\t{is_write}"
 
 
-def parse_line(line: str) -> Tuple[int, str, int, int]:
+def parse_line(line: str) -> Tuple[int, str, int, int, str]:
+    """Parse one op line into ``(seq, op, arg, is_write, payload)``.
+
+    ``payload`` is the fifth column of the captured-workload ops
+    (``wdata``/``rdata``) and ``""`` otherwise; a fifth column on any
+    other op -- or a payload op without one -- is malformed.
+    """
     parts = line.rstrip("\n").split("\t")
-    if len(parts) != 4:
+    if len(parts) not in (4, 5):
         raise ValueError(
-            f"malformed trace line (want 4 tab-separated columns, "
+            f"malformed trace line (want 4 or 5 tab-separated columns, "
             f"got {len(parts)}): {line!r}")
-    seq_s, op, arg_s, w_s = parts
+    seq_s, op, arg_s, w_s = parts[:4]
+    payload = parts[4] if len(parts) == 5 else ""
+    if (len(parts) == 5) != (op in PAYLOAD_OPS) or (op in PAYLOAD_OPS
+                                                    and not payload):
+        raise ValueError(
+            f"payload column is required for {sorted(PAYLOAD_OPS)} ops "
+            f"and forbidden otherwise: {line!r}")
     try:
         seq = int(seq_s)
         arg = int(arg_s, 16 if arg_s.startswith("0x") else 10)
@@ -165,7 +205,35 @@ def parse_line(line: str) -> Tuple[int, str, int, int]:
         raise ValueError(f"malformed trace line {line!r}: {e}") from None
     if w not in (0, 1):
         raise ValueError(f"is_write must be 0 or 1 in {line!r}")
-    return seq, op, arg, w
+    return seq, op, arg, w, payload
+
+
+def encode_payload(data: bytes) -> str:
+    """Write payload wire form: zlib+base64 (tab-free single token)."""
+    return base64.b64encode(zlib.compress(bytes(data), 6)).decode("ascii")
+
+
+def decode_payload(payload: str) -> bytes:
+    try:
+        return zlib.decompress(base64.b64decode(payload, validate=True))
+    except (binascii.Error, zlib.error, ValueError) as e:
+        raise ValueError(f"malformed wdata payload: {e}") from None
+
+
+def encode_read_check(data: bytes) -> str:
+    """Read-verify wire form: ``nbytes:crc32hex`` of the bytes read."""
+    return f"{len(data)}:{zlib.crc32(data) & 0xFFFFFFFF:08x}"
+
+
+def decode_read_check(payload: str) -> Tuple[int, int]:
+    try:
+        nbytes_s, crc_s = payload.split(":", 1)
+        nbytes, crc = int(nbytes_s), int(crc_s, 16)
+    except ValueError as e:
+        raise ValueError(f"malformed rdata check: {e}") from None
+    if nbytes < 0:
+        raise ValueError(f"malformed rdata check (negative size): {payload!r}")
+    return nbytes, crc
 
 
 # --------------------------------------------------------------- generator
@@ -286,6 +354,171 @@ class TraceGen:
         return len(self._ops)
 
 
+class _Coverage:
+    """Merged, sorted, disjoint ``[start, end)`` byte intervals of one MS
+    whose replay-side content is known (written during capture, or
+    zero-filled by a capture-time alloc)."""
+
+    __slots__ = ("iv",)
+
+    def __init__(self, iv: Optional[List[Tuple[int, int]]] = None) -> None:
+        self.iv: List[Tuple[int, int]] = iv or []
+
+    def add(self, start: int, end: int) -> None:
+        if end <= start:
+            return
+        merged: List[Tuple[int, int]] = []
+        for s, e in self.iv:
+            if e < start or s > end:         # disjoint (touching merges)
+                merged.append((s, e))
+            else:
+                start, end = min(s, start), max(e, end)
+        merged.append((start, end))
+        merged.sort()
+        self.iv = merged
+
+    def gaps(self, start: int, end: int) -> List[Tuple[int, int]]:
+        """Uncovered subranges of ``[start, end)``, in order."""
+        out: List[Tuple[int, int]] = []
+        cur = start
+        for s, e in self.iv:
+            if e <= cur:
+                continue
+            if s >= end:
+                break
+            if s > cur:
+                out.append((cur, s))
+            cur = max(cur, e)
+            if cur >= end:
+                return out
+        if cur < end:
+            out.append((cur, end))
+        return out
+
+
+class TraceRecorder(GuestObserver):
+    """Capture observer: renders live guest traffic on a ``GuestSpace``
+    into a replayable fleet trace (tracehm's record-at-the-access-layer
+    design).
+
+    Attach to the canonical space of the system an application drives::
+
+        rec = space.attach(TraceRecorder.for_space(space))
+        ... run the serving loop ...
+        lines = rec.lines()            # replayable on any fleet
+
+    Allocs/frees become placement-agnostic token ops; writes become
+    ``wdata`` ops carrying the application's actual bytes; reads become
+    ``rdata`` ops carrying a content hash, so a replay verifies every
+    read against what the application really saw; zero-length residency
+    hints (batched touch, step pins) become ``touch`` reads; background
+    rounds become ``tick`` ops.
+
+    Partial captures replay byte-identically: an MS allocated *before*
+    capture started is registered lazily on first access with empty
+    write coverage, and a read of any not-yet-covered range first emits
+    a ``wdata`` re-establishing the observed bytes -- the replay cannot
+    know pre-capture content any other way.  MSs allocated during
+    capture start fully covered (alloc zero-fills on both sides).
+    """
+
+    def __init__(self, ms_bytes: int, mps_per_ms: int, *,
+                 seed: int = 0) -> None:
+        # zero/comp fracs are meaningless for captured payloads; the
+        # header keeps them only so seed-derived touch writes (if any
+        # are spliced in) stay well-defined
+        self.header = TraceHeader(seed, ms_bytes, mps_per_ms, 0.0, 0.0)
+        self._lock = threading.Lock()
+        self._token: Dict[int, int] = {}     # live gfn -> trace token
+        self._cov: Dict[int, _Coverage] = {}  # token -> known-content ranges
+        self._next_token = 0
+        self._ops: List[Tuple[str, int, int, str]] = []
+
+    @classmethod
+    def for_space(cls, space, *, seed: int = 0) -> "TraceRecorder":
+        return cls(space.cfg.ms_bytes, space.cfg.mps_per_ms, seed=seed)
+
+    # ------------------------------------------------------ observer hooks
+    def on_alloc(self, gfn: int) -> None:
+        with self._lock:
+            # a capture-time alloc is zero-filled at replay too: the
+            # whole MS counts as known content
+            self._register(gfn, covered=True)
+
+    def on_free(self, gfn: int) -> None:
+        with self._lock:
+            token = self._token.pop(gfn, None)
+            if token is not None:
+                self._cov.pop(token, None)
+                self._ops.append((OP_FREE, token, 0, ""))
+
+    def on_access(self, gfn: int, off: int, nbytes: int, is_write: bool,
+                  data: Optional[bytes] = None) -> None:
+        with self._lock:
+            token = self._token_of(gfn)
+            addr = token * self.header.ms_bytes + off
+            if nbytes == 0:                  # residency hint (touch / pin)
+                self._ops.append((OP_TOUCH, addr, 0, ""))
+                return
+            cov = self._cov[token]
+            if is_write:
+                cov.add(off, off + nbytes)
+                self._ops.append((OP_WDATA, addr, 1, encode_payload(data)))
+                return
+            # pre-capture content (lazily-registered MS, or any range no
+            # recorded write covers) must be re-established before the
+            # read can verify -- emit the observed bytes as wdata first
+            for gs, ge in cov.gaps(off, off + nbytes):
+                self._ops.append((
+                    OP_WDATA, token * self.header.ms_bytes + gs, 1,
+                    encode_payload(data[gs - off:ge - off])))
+            cov.add(off, off + nbytes)
+            self._ops.append((OP_RDATA, addr, 0, encode_read_check(data)))
+
+    def on_tick(self, rounds: int) -> None:
+        with self._lock:
+            self._ops.append((OP_TICK, rounds, 0, ""))
+
+    def _register(self, gfn: int, *, covered: bool) -> int:
+        token = self._next_token
+        self._next_token += 1
+        self._token[gfn] = token
+        self._cov[token] = _Coverage(
+            [(0, self.header.ms_bytes)] if covered else None)
+        self._ops.append((OP_ALLOC, token, 0, ""))
+        return token
+
+    def _token_of(self, gfn: int) -> int:
+        token = self._token.get(gfn)
+        if token is None:                    # allocated before capture began
+            token = self._register(gfn, covered=False)
+        return token
+
+    # -------------------------------------------------------------- output
+    def lines(self) -> List[str]:
+        with self._lock:
+            return [self.header.line()] + [
+                format_line(i, op, arg, w, payload)
+                for i, (op, arg, w, payload) in enumerate(self._ops)]
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines()) + "\n")
+
+    @property
+    def n_ops(self) -> int:
+        with self._lock:
+            return len(self._ops)
+
+    def op_counts(self) -> Dict[str, int]:
+        """Recorded ops by kind (e.g. ``{"alloc": 3, "wdata": 12, ...}``)."""
+        with self._lock:
+            counts: Dict[str, int] = {}
+            for op, _arg, _w, _payload in self._ops:
+                counts[op] = counts.get(op, 0) + 1
+            return counts
+
+
 class TraceReplayer:
     """Deterministic seeded trace replay through a fleet controller.
 
@@ -322,11 +555,17 @@ class TraceReplayer:
         # token -> written MP set: keyed by token so frees, hard-kill
         # re-placements and losses forget a whole token in one pop
         self.written: Dict[int, Set[int]] = {}
+        # tokens whose captured payload content died with a node (hard
+        # kill re-placed them as fresh zeroed MSs): rdata content checks
+        # must not expect the capture-time bytes any more
+        self.payload_lost: Set[int] = set()
         self.counters: Dict[str, int] = {
             "ops": 0, "allocs": 0, "frees": 0, "reads": 0, "writes": 0,
             "ticks": 0, "upgrades": 0, "touch_unplaced": 0,
             "touch_not_serving": 0, "free_not_serving": 0,
             "verify_failures": 0,
+            "payload_writes": 0, "payload_reads": 0,
+            "payload_verify_skipped": 0,
             "kills": 0, "recovers": 0,
             "migrations": 0, "migrate_rejected": 0, "migrate_unplaced": 0,
             "touch_dead": 0, "free_dead": 0,
@@ -338,7 +577,7 @@ class TraceReplayer:
     # --------------------------------------------------------------- replay
     def run(self) -> Dict[str, object]:
         for line in self._body:
-            _seq, op, arg, is_write = parse_line(line)
+            _seq, op, arg, is_write, payload = parse_line(line)
             self.counters["ops"] += 1
             if op == OP_ALLOC:
                 self._op_alloc(arg)
@@ -346,6 +585,10 @@ class TraceReplayer:
                 self._op_free(arg)
             elif op == OP_TOUCH:
                 self._op_touch(arg, is_write)
+            elif op == OP_WDATA:
+                self._op_wdata(arg, payload)
+            elif op == OP_RDATA:
+                self._op_rdata(arg, payload)
             elif op == OP_TICK:
                 for _ in range(arg):
                     self.controller.tick()
@@ -378,6 +621,7 @@ class TraceReplayer:
             self.placed.pop(token, None)
             self.counters["ms_lost"] += 1
             self.written.pop(token, None)
+            self.payload_lost.discard(token)
             return
         self.placed[token] = (dst_node, new_gfn)
         self._loc[(dst_node.node_id, new_gfn)] = token
@@ -385,9 +629,11 @@ class TraceReplayer:
             self.counters["ms_migrated"] += 1
         else:
             # hard-kill re-placement: a fresh zeroed MS -- prior writes
-            # are gone, so read-verify must not expect them
+            # are gone, so read-verify (seed-derived AND captured-payload
+            # content checks) must not expect them
             self.counters["ms_replaced"] += 1
             self.written.pop(token, None)
+            self.payload_lost.add(token)
 
     def _op_migrate(self, token: int) -> None:
         placed = self.placed.get(token)
@@ -433,6 +679,7 @@ class TraceReplayer:
         self.counters["frees"] += 1
         self._loc.pop((node.node_id, gfn), None)
         self.written.pop(token, None)
+        self.payload_lost.discard(token)
 
     def _op_touch(self, addr: int, is_write: int) -> None:
         hdr = self.header
@@ -462,6 +709,60 @@ class TraceReplayer:
             self.counters["touch_dead"] += 1
         except self._not_serving_exc:
             self.counters["touch_not_serving"] += 1
+
+    # ------------------------------------------------- captured payload ops
+    def _locate(self, addr: int):
+        """(node, gfn, byte offset) for a captured payload address, or
+        ``None`` (counted like any other unplaced touch)."""
+        token, off = divmod(addr, self.header.ms_bytes)
+        placed = self.placed.get(token)
+        if placed is None:
+            self.counters["touch_unplaced"] += 1
+            return None
+        node, gfn = placed
+        return node, gfn, off
+
+    def _op_wdata(self, addr: int, payload: str) -> None:
+        loc = self._locate(addr)
+        if loc is None:
+            return
+        node, gfn, off = loc
+        data = decode_payload(payload)
+        try:
+            node.write_at(gfn, off, data)
+        except self._dead_exc:
+            self.counters["touch_dead"] += 1
+            return
+        except self._not_serving_exc:
+            self.counters["touch_not_serving"] += 1
+            return
+        self.counters["payload_writes"] += 1
+
+    def _op_rdata(self, addr: int, payload: str) -> None:
+        nbytes, crc = decode_read_check(payload)
+        loc = self._locate(addr)
+        if loc is None:
+            return
+        node, gfn, off = loc
+        try:
+            got = node.read_at(gfn, off, nbytes)
+        except self._dead_exc:
+            self.counters["touch_dead"] += 1
+            return
+        except self._not_serving_exc:
+            self.counters["touch_not_serving"] += 1
+            return
+        self.counters["payload_reads"] += 1
+        if not self.verify_reads:
+            return
+        if addr // self.header.ms_bytes in self.payload_lost:
+            # the token's content died in a hard kill and was re-placed
+            # zeroed: a capture-time hash cannot match, and that is the
+            # correct replay outcome, not a data-integrity failure
+            self.counters["payload_verify_skipped"] += 1
+            return
+        if zlib.crc32(got) & 0xFFFFFFFF != crc:
+            self.counters["verify_failures"] += 1
 
     # --------------------------------------------------------------- result
     def result(self) -> Dict[str, object]:

@@ -1,0 +1,160 @@
+"""Captured serving workloads replay deterministically on a fleet (ISSUE 5).
+
+Acceptance: a trace captured from the real elastic_kv serving loop (and
+one from elastic_params expert churn) replays byte-identically on a
+>= 2-node fleet via ``harness.assert_deterministic``, with zero
+read-verify failures -- every ``rdata`` op checks the replayed bytes
+against the content hash of what the application actually read at
+capture time, and every ``wdata`` op rewrites the application's actual
+bytes (not seed-derived pages).
+"""
+import pytest
+
+from repro.fleet.capture import capture_expert_churn, capture_kv_serving
+from repro.fleet.harness import assert_deterministic, replay
+from repro.fleet.trace import OP_RDATA, OP_TICK, OP_WDATA, TraceHeader, parse_line
+
+
+def _ops(cap):
+    return [parse_line(ln) for ln in cap.lines[1:]]
+
+
+@pytest.fixture(scope="module")
+def kv_capture():
+    return capture_kv_serving(smoke=True)
+
+
+@pytest.fixture(scope="module")
+def expert_capture():
+    return capture_expert_churn(smoke=True)
+
+
+def test_kv_capture_shape(kv_capture):
+    """The captured trace is a well-formed workload: payload writes of
+    real KV bytes, content-hash reads, background ticks, recycling."""
+    hdr = TraceHeader.parse(kv_capture.lines[0])
+    assert hdr.ms_bytes == kv_capture.cfg.ms_bytes
+    ops = [op for _s, op, _a, _w, _p in _ops(kv_capture)]
+    assert kv_capture.payload_writes > 50        # real fp16 KV appends
+    assert kv_capture.payload_reads >= 1         # read_block verification
+    assert OP_TICK in ops                        # aging travels in-trace
+    assert ops.count("free") > 0                 # conversation recycling
+
+
+def test_kv_capture_replays_deterministically(kv_capture):
+    eq = assert_deterministic(kv_capture.lines, n_nodes=2, domains=2,
+                              cfg=kv_capture.fleet_cfg)
+    c = eq.runs[0].counters
+    assert c["verify_failures"] == 0
+    assert c["payload_writes"] == kv_capture.payload_writes
+    assert c["payload_reads"] == kv_capture.payload_reads
+    assert c["touch_unplaced"] == 0              # every token admitted
+    # the replayed fleet actually exercised elasticity, not just writes
+    det = eq.runs[0].deterministic
+    assert det["admitted"] > 0
+    assert det["reclaimed_mps"] > 0
+
+
+def test_expert_capture_replays_deterministically(expert_capture):
+    assert expert_capture.payload_writes > 10    # puts + optimizer updates
+    assert expert_capture.payload_reads >= 1
+    eq = assert_deterministic(expert_capture.lines, n_nodes=2, domains=2,
+                              cfg=expert_capture.fleet_cfg)
+    c = eq.runs[0].counters
+    assert c["verify_failures"] == 0
+    assert c["touch_unplaced"] == 0
+
+
+def test_partial_capture_replays_with_zero_verify_failures():
+    """Capture attached mid-run: pre-capture MS content is re-established
+    by recorder-synthesized wdata ops, so the replay still verifies every
+    read byte-for-byte."""
+    import numpy as np
+    from repro.core.system import TaijiSystem
+    from repro.fleet.trace import TraceRecorder
+
+    cap = capture_kv_serving(smoke=True)         # just for a sized cfg
+    system = TaijiSystem(cap.cfg)
+    space = system.guest
+    rng = np.random.default_rng(5)
+    pre = [space.alloc_ms() for _ in range(4)]   # pre-capture population
+    blobs = {g: rng.integers(0, 256, cap.cfg.ms_bytes, dtype=np.int64)
+             .astype(np.uint8).tobytes() for g in pre}
+    for g, blob in blobs.items():
+        space.write(g, blob)
+    rec = space.attach(TraceRecorder.for_space(space))
+    for g in pre:                                # reads of unseen content
+        space.read(g)
+    space.step_background()
+    for g in pre:
+        space.read(g, 128, off=256)
+    lines = rec.lines()
+    system.close()
+    eq = assert_deterministic(lines, n_nodes=2, domains=2,
+                              cfg=cap.fleet_cfg)
+    c = eq.runs[0].counters
+    assert c["payload_reads"] == 8
+    assert c["verify_failures"] == 0
+
+
+def test_chaos_data_loss_does_not_fake_verify_failures():
+    """A hard kill re-places a token's MS as a fresh zeroed MS; a later
+    captured-content read of that token must be counted as skipped (the
+    content is correctly gone), not as a data-integrity failure."""
+    from repro.fleet.trace import (TraceHeader, encode_payload,
+                                   encode_read_check, format_line)
+
+    cap = capture_kv_serving(smoke=True)         # just for a sized cfg
+    cfg = cap.fleet_cfg
+    hdr = TraceHeader(0, cfg.ms_bytes, cfg.mps_per_ms, 0.0, 0.0)
+    data = b"\x42" * 64
+    ops = [
+        ("alloc", 0, 0, ""),                     # token 0 -> node 0
+        ("wdata", 64, 1, encode_payload(data)),
+        ("kill", 0, 0, ""),                      # hard crash of node 0
+        ("tick", 2, 0, ""),                      # re-place token 0 fresh
+        ("rdata", 64, 0, encode_read_check(data)),
+    ]
+    lines = [hdr.line()] + [format_line(i, *op) for i, op in enumerate(ops)]
+    eq = assert_deterministic(lines, n_nodes=2, domains=2, cfg=cfg)
+    c = eq.runs[0].counters
+    assert c["ms_replaced"] == 1                 # re-placed fresh (zeroed)
+    assert c["payload_reads"] == 1               # the read still executed
+    assert c["payload_verify_skipped"] == 1      # ...but is not "corrupt"
+    assert c["verify_failures"] == 0
+
+
+def test_capture_is_seed_stable():
+    """Same seed -> byte-identical captured trace (the capture loop is
+    fully deterministic, so traces are reproducible artifacts)."""
+    a = capture_kv_serving(seed=23, smoke=True)
+    b = capture_kv_serving(seed=23, smoke=True)
+    assert a.lines == b.lines
+
+
+def test_corrupted_payload_fails_read_verify(kv_capture):
+    """Flipping one captured write's payload must be caught by the
+    content-hash verification of a later read of the same region --
+    the replay-side proof that rdata actually checks bytes."""
+    lines = list(kv_capture.lines)
+    # find a wdata whose exact (addr) is later rdata-verified
+    wdata_at = {}
+    verified = None
+    for i, ln in enumerate(lines[1:], start=1):
+        _s, op, arg, _w, _p = parse_line(ln)
+        if op == OP_WDATA:
+            wdata_at[arg] = i
+        elif op == OP_RDATA:
+            # rdata reads span whole blocks; any wdata inside the span
+            # that wrote non-zero bytes works -- use exact-addr match
+            if arg in wdata_at:
+                verified = wdata_at[arg]
+    if verified is None:
+        pytest.skip("capture produced no exact write->read pair")
+    from repro.fleet.trace import encode_payload, decode_payload, format_line
+    seq, op, arg, w, payload = parse_line(lines[verified])
+    data = bytearray(decode_payload(payload))
+    data[0] ^= 0xFF
+    lines[verified] = format_line(seq, op, arg, w, encode_payload(bytes(data)))
+    run = replay(lines, n_nodes=2, domains=2, cfg=kv_capture.fleet_cfg)
+    assert run.counters["verify_failures"] > 0

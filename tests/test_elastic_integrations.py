@@ -102,6 +102,6 @@ def test_expert_cache_residency_follows_routing():
 
     # dispatch pinning works for a cold expert
     with cache.prepare_dispatch([5]):
-        gfn = cache._gfn[5]
+        gfn = cache._view[5].gfn
         assert system.virt.table.is_pinned(gfn)
     system.close()

@@ -32,10 +32,11 @@ def test_trace_tsv_roundtrip(tmp_path):
     assert hdr.seed == 11 and hdr.ms_bytes == cfg.ms_bytes
     seqs = []
     for ln in lines[1:]:
-        seq, op, arg, w = parse_line(ln)
+        seq, op, arg, w, payload = parse_line(ln)
         seqs.append(seq)
         assert op in ("alloc", "free", "touch", "tick", "upgrade")
         assert w in (0, 1)
+        assert payload == ""             # seed-derived traces carry none
     assert seqs == list(range(len(seqs)))    # dense sequence numbers
 
 
@@ -150,6 +151,36 @@ def test_rolling_upgrade_no_node_serves_traffic_mid_upgrade():
     for n in fleet.nodes:
         assert n.serving and n.module_version == 2 and n.upgrade_epoch == 1
         n.read_mp(allocs[n.node_id], 0, 16)   # serving again post-upgrade
+    fleet.close()
+
+
+def test_production_profile_rollout_completes_with_guard_armed():
+    """The named production profile (ROADMAP wiring item): the latency
+    guard is live on every batch -- pre-batch histograms are captured and
+    validated -- and a healthy module still rolls out to completion."""
+    prof = FleetConfig.production_profile()
+    assert prof.latency_guard_factor is not None
+    fleet = make_fleet(n_nodes=4, domains=2, fleet_cfg=prof)
+    allocs = [fleet.admit_alloc() for _ in range(8)]
+    for node, gfn, ok in allocs:
+        assert ok == "ok"
+        node.write_mp(gfn, 0, b"\x3C" * node.cfg.mp_bytes)
+        node.system.engine.swap_out_ms(gfn)
+        node.read_mp(gfn, 0)                  # fault: guard baseline samples
+    fleet.start_rolling_upgrade(EngineModuleV2)
+    assert fleet._rolling.baseline_p90_ns > 0  # guard baseline captured
+    for _ in range(40):
+        if not fleet.upgrade_in_progress:
+            break
+        fleet.tick()
+        if fleet._rolling is not None and fleet._rolling.in_flight:
+            # guard pre-batch capture ran because the factor is wired
+            assert fleet._rolling.pre_batch_hist is not None
+    assert not fleet.upgrade_aborted, fleet.upgrade_abort_reason
+    assert fleet.upgrade_batches_done == 2
+    assert all(n.module_version == 2 for n in fleet.nodes)
+    # profile knobs actually shape the fleet round: 4 stagger groups
+    assert fleet.cfg.reclaim_stagger_groups == 4
     fleet.close()
 
 

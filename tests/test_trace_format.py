@@ -15,8 +15,11 @@ except ImportError:          # pragma: no cover - CI pins hypothesis
     HAVE_HYPOTHESIS = False
 
 from repro.fleet.trace import (OP_ALLOC, OP_FREE, OP_KILL, OP_MIGRATE,
-                               OP_RECOVER, OP_TICK, OP_TOUCH, OP_UPGRADE,
-                               TraceHeader, format_line, parse_line)
+                               OP_RDATA, OP_RECOVER, OP_TICK, OP_TOUCH,
+                               OP_UPGRADE, OP_WDATA, TraceHeader,
+                               decode_payload, decode_read_check,
+                               encode_payload, encode_read_check,
+                               format_line, parse_line)
 
 OPS = (OP_ALLOC, OP_FREE, OP_TOUCH, OP_TICK, OP_UPGRADE,
        OP_KILL, OP_RECOVER, OP_MIGRATE)
@@ -26,8 +29,20 @@ OPS = (OP_ALLOC, OP_FREE, OP_TOUCH, OP_TICK, OP_UPGRADE,
 def _roundtrip_line(seq, op, arg, w):
     line = format_line(seq, op, arg, w)
     assert "\n" not in line
-    assert parse_line(line) == (seq, op, arg, w)
-    assert parse_line(line + "\n") == (seq, op, arg, w)   # file form
+    assert parse_line(line) == (seq, op, arg, w, "")
+    assert parse_line(line + "\n") == (seq, op, arg, w, "")   # file form
+
+
+def _roundtrip_payload_line(seq, arg, data):
+    wline = format_line(seq, OP_WDATA, arg, 1, encode_payload(data))
+    assert "\n" not in wline
+    pseq, pop, parg, pw, payload = parse_line(wline)
+    assert (pseq, pop, parg, pw) == (seq, OP_WDATA, arg, 1)
+    assert decode_payload(payload) == data
+    rline = format_line(seq, OP_RDATA, arg, 0, encode_read_check(data))
+    _, _, _, _, check = parse_line(rline)
+    assert decode_read_check(check) == (len(data), __import__(
+        "zlib").crc32(data) & 0xFFFFFFFF)
 
 
 def _roundtrip_header(seed, ms_bytes, mps_per_ms, zero, comp):
@@ -47,6 +62,12 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=80, deadline=None)
     def test_line_roundtrip_random(seq, op, arg, w):
         _roundtrip_line(seq, op, arg, w)
+
+    @given(st.integers(0, 10**9), st.integers(0, 2**48),
+           st.binary(min_size=0, max_size=512))
+    @settings(max_examples=60, deadline=None)
+    def test_payload_line_roundtrip_random(seq, arg, data):
+        _roundtrip_payload_line(seq, arg, data)
 
     @given(st.integers(0, 2**31),
            st.integers(1, 64).map(lambda k: 512 * k),
@@ -77,11 +98,23 @@ def test_header_roundtrip_seeded_fallback():
                           round(rng.random(), 4), round(rng.random(), 4))
 
 
+def test_payload_line_roundtrip_seeded_fallback():
+    rng = random.Random(0x9DA7A)
+    for _ in range(120):
+        _roundtrip_payload_line(rng.randrange(0, 10**9),
+                                rng.randrange(0, 2**48),
+                                rng.randbytes(rng.randrange(0, 512)))
+
+
 # ------------------------------------------------------ malformed inputs
 @pytest.mark.parametrize("line", [
     "",                                  # empty
     "1\talloc\t3",                       # missing column
-    "1\talloc\t3\t0\textra",             # extra column
+    "1\talloc\t3\t0\textra",             # payload column on a payload-free op
+    "1\twdata\t0x40\t1",                 # payload op without its payload
+    "1\twdata\t0x40\t1\t",               # payload op with an empty payload
+    "1\trdata\t0x40\t0",                 # ditto for the read-check op
+    "1\twdata\t0x40\t1\ta\tb",           # too many columns
     "x\talloc\t3\t0",                    # non-int seq
     "1\talloc\tzz\t0",                   # non-int arg
     "1\ttouch\t0xgg\t0",                 # bad hex arg
@@ -92,6 +125,21 @@ def test_header_roundtrip_seeded_fallback():
 def test_malformed_lines_rejected(line):
     with pytest.raises(ValueError):
         parse_line(line)
+
+
+@pytest.mark.parametrize("payload", [
+    "not-base64!",                       # bad alphabet
+    "aGVsbG8=",                          # valid base64, not zlib
+])
+def test_malformed_payloads_rejected(payload):
+    with pytest.raises(ValueError):
+        decode_payload(payload)
+
+
+@pytest.mark.parametrize("check", ["", "64", "x:abcd", "64:zz", "-1:00000000"])
+def test_malformed_read_checks_rejected(check):
+    with pytest.raises(ValueError):
+        decode_read_check(check)
 
 
 @pytest.mark.parametrize("line", [
