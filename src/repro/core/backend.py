@@ -70,10 +70,10 @@ class _Extent:
     """
 
     __slots__ = ("payload", "is_raw", "remaining", "stored_len", "mps",
-                 "total", "dropped", "crc", "verified")
+                 "total", "dropped", "crc", "verified", "tags")
 
     def __init__(self, payload: bytes, stored_len: int, mps: List[int],
-                 crc: int) -> None:
+                 crc: int, tags: Optional[np.ndarray] = None) -> None:
         self.payload = payload       # zlib stream, or raw once cached
         self.is_raw = False
         self.remaining = len(mps)
@@ -86,6 +86,9 @@ class _Extent:
         # row (verified latches so sibling materializations skip recheck)
         self.crc = crc
         self.verified = False
+        # device-side per-row Fletcher tags (kernels/crc32c.py) when the
+        # Pallas data path is on; None on the host-only path
+        self.tags = tags
 
 
 class BackendStore:
@@ -118,11 +121,40 @@ class BackendStore:
         # CRC of an all-zero MP is constant: the zero-page fault fast path
         # compares against it instead of recomputing a CRC per fault
         self.zero_crc = zlib.crc32(bytes(cfg.mp_bytes))
+        hp = getattr(cfg.swap, "hot_path", None)
         if cfg.swap.use_pallas_kernels:
             from ..kernels import ops as _kops
             self._kernel_zero_detect = _kops.batch_zero_detect
+            # device-side Fletcher integrity tags per extent row; the
+            # zlib CRCs stored in MS records are unchanged (hot-upgrade
+            # ABI stays byte-compatible), this is an extra check the
+            # device can run without the host
+            self._kernel_checksum = _kops.batch_checksum
         else:
             self._kernel_zero_detect = None
+            self._kernel_checksum = None
+        # extent (de)compression worker pool (HotPathConfig.compress_workers):
+        # zlib releases the GIL, so extents compress in parallel; results
+        # always merge in submission order so the stored bytes are
+        # identical for any worker count. Lazily created: most systems in
+        # tests never swap enough to need it.
+        self._pool = None
+        self._pool_lock = threading.Lock()
+        self._pool_workers = int(hp.compress_workers) if hp is not None else 0
+
+    def _compress_pool(self):
+        """The lazy extent-compression pool, or ``None`` for the serial
+        path (``compress_workers <= 1``)."""
+        if self._pool_workers <= 1:
+            return None
+        if self._pool is None:
+            with self._pool_lock:
+                if self._pool is None:
+                    from concurrent.futures import ThreadPoolExecutor
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=self._pool_workers,
+                        thread_name_prefix="taiji-ext")
+        return self._pool
 
     def _shard_idx(self, gfn: int, mp: int) -> int:
         return (gfn * 1000003 + mp) % len(self._locks)
@@ -322,6 +354,50 @@ class BackendStore:
         with self._ext_lock:
             return self._ext_raw(self._extents[(gfn, eid)])
 
+    def _ext_prefetch_raw(self, gfn: int, eids: List[int]) -> None:
+        """Decompress several extents' payloads concurrently through the
+        worker pool, then install the raw buffers under ``_ext_lock``.
+
+        Purely an optimization of :meth:`_ext_peek`: installation
+        rechecks ``is_raw`` so a racing decompress (scalar fault, other
+        batch) simply wins the cache; the bytes are identical either way.
+        """
+        pool = self._compress_pool()
+        with self._ext_lock:
+            todo = [(eid, ext.payload) for eid in eids
+                    if (ext := self._extents.get((gfn, eid))) is not None
+                    and not ext.is_raw]
+        if not todo:
+            return
+        if pool is not None and len(todo) > 1:
+            raws = list(pool.map(zlib.decompress, [p for _, p in todo]))
+        else:
+            raws = [zlib.decompress(p) for _, p in todo]
+        with self._ext_lock:
+            for (eid, _), raw in zip(todo, raws):
+                ext = self._extents.get((gfn, eid))
+                if ext is not None and not ext.is_raw:
+                    ext.payload = raw
+                    ext.is_raw = True
+
+    def _ext_verify_tags(self, gfn: int, eid: int, arr: np.ndarray) -> None:
+        """Device-side integrity check: recompute the extent's per-row
+        Fletcher tags through the kernel and compare with the tags taken
+        at store time. The zlib CRC check against the MS record still
+        runs afterwards -- this is the check a DPU offload can run
+        without host help."""
+        with self._ext_lock:
+            ext = self._extents.get((gfn, eid))
+            tags = ext.tags if ext is not None else None
+        if tags is None:
+            return
+        actual = np.asarray(self._kernel_checksum(arr))
+        if (actual != tags).any():
+            bad = int(np.flatnonzero(actual != tags)[0])
+            self.metrics.crc_failures += 1
+            raise CorruptionError(
+                f"extent tag mismatch gfn={gfn} eid={eid} row={bad}")
+
     def _ext_release(self, gfn: int, eid: int, count: int) -> None:
         """Consume ``count`` rows of an extent, freeing it on the last."""
         with self._ext_lock:
@@ -462,20 +538,35 @@ class BackendStore:
         if len(rest) and use_extent:
             max_rows = max(1, bk.extent_max_rows)
             leftovers: List[np.ndarray] = []
-            for lo in range(0, len(rest), max_rows):
-                sub = rest[lo:lo + max_rows]
-                raw_cat = data[sub].tobytes()
-                ext_blob = zlib.compress(raw_cat, bk.compression_level)
+            # chunk boundaries are fixed by extent_max_rows, zlib.compress
+            # is deterministic, and the pool merges in submission order:
+            # the stored bytes are identical for any worker count
+            chunks = [rest[lo:lo + max_rows]
+                      for lo in range(0, len(rest), max_rows)]
+            raw_cats = [data[sub].tobytes() for sub in chunks]
+            level = bk.compression_level
+            pool = self._compress_pool() if len(chunks) > 1 else None
+            if pool is not None:
+                ext_blobs = list(pool.map(
+                    lambda rc: zlib.compress(rc, level), raw_cats))
+            else:
+                ext_blobs = [zlib.compress(rc, level) for rc in raw_cats]
+            row_tags = None
+            if self._kernel_checksum is not None:
+                # one device kernel call tags every extent row in the batch
+                row_tags = np.asarray(self._kernel_checksum(data))
+            for sub, raw_cat, ext_blob in zip(chunks, raw_cats, ext_blobs):
                 if len(ext_blob) >= len(raw_cat):
                     leftovers.append(sub)     # incompressible: per-row path
                     continue
                 ext_mps = [int(mps[i]) for i in sub]
                 ext_crc = zlib.crc32(raw_cat) if bk.crc_enabled else 0
+                tags = row_tags[sub].copy() if row_tags is not None else None
                 with self._ext_lock:
                     eid = self._ext_seq
                     self._ext_seq += 1
                     self._extents[(gfn, eid)] = _Extent(
-                        ext_blob, len(ext_blob), ext_mps, ext_crc)
+                        ext_blob, len(ext_blob), ext_mps, ext_crc, tags)
                 for row, i in enumerate(sub):
                     kinds[i] = K_COMPRESSED
                     mp = ext_mps[row]
@@ -593,10 +684,17 @@ class BackendStore:
                                            dtype=np.uint8)
                 else:                         # "v": stored verbatim
                     out[i] = np.frombuffer(entry[1], dtype=np.uint8)
+            if len(by_ext) > 1:
+                # decompress the batch's extents in parallel (zlib drops
+                # the GIL); each payload installs idempotently under the
+                # extent lock, so racing a concurrent scalar fault is safe
+                self._ext_prefetch_raw(gfn, list(by_ext))
             for eid, pairs in by_ext.items():
                 # one decompress + one scatter for all rows of this extent
                 raw = self._ext_peek(gfn, eid)
                 arr = np.frombuffer(raw, dtype=np.uint8).reshape(-1, n)
+                if self._kernel_checksum is not None:
+                    self._ext_verify_tags(gfn, eid, arr)
                 out[[p[0] for p in pairs]] = arr[[p[1] for p in pairs]]
             self.metrics.fault_compressed_pages += len(comp_rows)
 
@@ -647,6 +745,9 @@ class BackendStore:
         self._free_page_probe = probe
 
     def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
         if self._disk_file is not None:
             path = self._disk_file.name
             self._disk_file.close()

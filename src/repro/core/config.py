@@ -15,7 +15,7 @@ Plane Compatibility").
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 ABI_VERSION = 1
 
@@ -60,6 +60,69 @@ class SchedulerConfig:
     overrun_penalty: float = 0.5
     penalty_cycles: int = 3
     shards: int = 2                 # number of scheduler shards (PCPUs/CPs)
+    # adaptive idle backoff: a shard whose cycle spends (almost) none of
+    # its budget -- empty LRU slices, watermark satisfied -- doubles its
+    # sleep up to ``idle_backoff_max`` cycles, then snaps back to 1 the
+    # moment a cycle does real work. This is hv_sched's "unused slices
+    # flow to FRONT" taken to its wall-clock conclusion: an idle manager
+    # must not steal GIL/CPU slices from the foreground decode step
+    # (paper Fig 11: benchmarks within 3% of native). Reclaim reaction
+    # worst-case grows to idle_backoff_max * cycle_ms, still far inside
+    # the high->low watermark gap; the critical path (min watermark)
+    # reclaims synchronously and never waits on a BACK wakeup.
+    idle_backoff_max: float = 16.0
+    # a cycle counts as idle when its tasks spent under this fraction of
+    # the cycle actually running
+    idle_spent_frac: float = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class HotPathConfig:
+    """The unified hot-path surface (ISSUE 6): every knob that decides
+    how a guest access or swap batch is serviced, in one documented
+    place.
+
+    * ``fast_fault`` -- zero-page ultrafast fault path: resolve a
+      zero-kind fault through the O(1) fault-descriptor table under the
+      req's short MP mutex only (no read-write lock round trip, no
+      condition-variable wait, constant-CRC compare). The locked scalar
+      path is kept as the A/B semantic reference.
+    * ``readahead`` -- extent readahead: the first fault into a
+      compressed extent decompresses the whole extent anyway, so
+      materialize *all* its still-swapped sibling MPs into the resident
+      MS in one pass; N future faults become zero faults and the
+      decompress cost is paid exactly once (paper §3.3/Fig 8 parallel
+      swapping, amortized).
+    * ``pallas_kernels`` -- route the batched data path through the
+      Pallas kernels in ``repro.kernels`` (zero-detect scan, Fletcher
+      extent tags, gather/scatter swap copies) instead of numpy/zlib
+      host ops -- the device entry point for a TPU backend;
+      interpret-mode on CPU, so the host path stays the default. The
+      per-MP CRC stored in MS records is zlib.crc32 on both paths
+      (records stay byte-compatible, hot-upgrade ABI §4.4); the Fletcher
+      checksum (kernels/crc32c.py, ops.batch_checksum) is the
+      device-side integrity tag computed per extent. Lossless compression
+      remains host zlib (the kernel ``compress.py`` is the *lossy* int8
+      KV tier and never feeds the exact backend).
+    * ``compress_workers`` -- fan ``store_batch``/``load_batch`` extent
+      (de)compression across a worker pool. zlib releases the GIL, so
+      extents compress in parallel; results merge in submission order,
+      making the stored bytes identical for ANY worker count (pinned by
+      tests/test_hotpath_batch.py). ``<= 1`` keeps the serial path.
+    """
+
+    fast_fault: bool = True      # O(1)-descriptor zero-page fast path
+    readahead: bool = True       # materialize whole extents on first fault
+    pallas_kernels: bool = False # device kernels for the batched data path
+    compress_workers: int = 4    # parallel extent (de)compression pool
+
+    @classmethod
+    def legacy_scalar(cls) -> "HotPathConfig":
+        """The pre-batching scalar reference profile: locked faults, no
+        readahead, host numpy/zlib, serial compression. The A/B baseline
+        benchmarks and semantic-equivalence tests measure against."""
+        return cls(fast_fault=False, readahead=False,
+                   pallas_kernels=False, compress_workers=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,33 +135,70 @@ class SwapConfig:
     racing fault waits on an active writer. ``batch_mps <= 0`` disables
     batching entirely (scalar per-MP path, kept for A/B benchmarks).
 
-    Fault-path knobs (paper O2: P90 < 10 us passive swap-in):
-
-    * ``fast_fault_enabled`` -- zero-page ultrafast path: resolve a
-      zero-kind fault through the O(1) fault-descriptor table under the
-      req's short MP mutex only (no read-write lock round trip, no
-      condition-variable wait, constant-CRC compare). The locked scalar
-      path is kept as the A/B semantic reference.
-    * ``readahead_enabled`` -- extent readahead: the first fault into a
-      compressed extent decompresses the whole extent anyway, so
-      materialize *all* its still-swapped sibling MPs into the resident
-      MS in one pass; N future faults become zero faults and the
-      decompress cost is paid exactly once (paper §3.3/Fig 8 parallel
-      swapping, amortized).
+    Fault/data-path servicing knobs live in :class:`HotPathConfig`
+    (``hot_path``). The historical scalar field names
+    (``fast_fault_enabled`` / ``readahead_enabled`` /
+    ``use_pallas_kernels``) are kept as aliases: passing them to the
+    constructor populates ``hot_path``, reading them reflects
+    ``hot_path``, and configs pickled before ``hot_path`` existed
+    unpickle with an equivalent one synthesized (``__setstate__``).
+    When both ``hot_path`` and a legacy flag are passed explicitly, the
+    legacy flag wins (this is what ``dataclasses.replace(cfg.swap,
+    fast_fault_enabled=...)`` produces).
     """
 
     batch_enabled: bool = True
     batch_mps: int = 64              # MPs per backend bulk call / cancel point
-    fast_fault_enabled: bool = True  # O(1)-descriptor zero-page fast path
-    readahead_enabled: bool = True   # materialize whole extents on first fault
-    # route the batch zero-page scan through the Pallas kernel
-    # (kernels/zero_detect.py) instead of numpy — the device entry point
-    # for a TPU backend; interpret-mode on CPU, so numpy stays the default.
-    # The per-MP CRC stored in MS records is zlib.crc32 on both paths
-    # (records stay byte-compatible, hot-upgrade ABI §4.4); the Fletcher
-    # kernel (kernels/crc32c.py, ops.batch_checksum) is the device-side
-    # checksum for flows that never leave the accelerator.
-    use_pallas_kernels: bool = False
+    hot_path: Optional[HotPathConfig] = None
+    # legacy aliases -- resolved into hot_path by __post_init__
+    fast_fault_enabled: Optional[bool] = None
+    readahead_enabled: Optional[bool] = None
+    use_pallas_kernels: Optional[bool] = None
+
+    def __post_init__(self) -> None:
+        hp = self.hot_path if self.hot_path is not None else HotPathConfig()
+        overrides = {}
+        if self.fast_fault_enabled is not None \
+                and bool(self.fast_fault_enabled) != hp.fast_fault:
+            overrides["fast_fault"] = bool(self.fast_fault_enabled)
+        if self.readahead_enabled is not None \
+                and bool(self.readahead_enabled) != hp.readahead:
+            overrides["readahead"] = bool(self.readahead_enabled)
+        if self.use_pallas_kernels is not None \
+                and bool(self.use_pallas_kernels) != hp.pallas_kernels:
+            overrides["pallas_kernels"] = bool(self.use_pallas_kernels)
+        if overrides:
+            hp = dataclasses.replace(hp, **overrides)
+        # aliases always mirror hot_path so old readers see one truth
+        object.__setattr__(self, "hot_path", hp)
+        object.__setattr__(self, "fast_fault_enabled", hp.fast_fault)
+        object.__setattr__(self, "readahead_enabled", hp.readahead)
+        object.__setattr__(self, "use_pallas_kernels", hp.pallas_kernels)
+
+    def __setstate__(self, state) -> None:
+        # configs pickled before hot_path existed restore a plain field
+        # dict; synthesize the HotPathConfig from the legacy scalars so
+        # old pickles keep working (hot-upgrade ABI promise)
+        if isinstance(state, tuple):          # (dict, slots) pickle form
+            merged = {}
+            for part in state:
+                if part:
+                    merged.update(part)
+            state = merged
+        state = dict(state)
+        if state.get("hot_path") is None:
+            state["hot_path"] = HotPathConfig(
+                fast_fault=bool(state.get("fast_fault_enabled", True)),
+                readahead=bool(state.get("readahead_enabled", True)),
+                pallas_kernels=bool(state.get("use_pallas_kernels", False)))
+        hp = state["hot_path"]
+        state["fast_fault_enabled"] = hp.fast_fault
+        state["readahead_enabled"] = hp.readahead
+        state["use_pallas_kernels"] = hp.pallas_kernels
+        state.setdefault("batch_enabled", True)
+        state.setdefault("batch_mps", 64)
+        for key, value in state.items():
+            object.__setattr__(self, key, value)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,6 +36,7 @@ import numpy as np
 from .config import TaijiConfig
 from .guest import GuestSpace
 from .system import TaijiSystem
+from .virt import F_SPLIT, NO_PFN
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,14 +169,29 @@ class ElasticKVCache:
             self._tokens[seq_id] = t + 1
 
     # ---------------------------------------------------------------- reads
+    def _block_dtype_shape(self):
+        g = self.geom
+        dt = np.float16 if g.dtype_bytes == 2 else np.float32
+        return dt, (g.block_tokens, g.n_layers, 2, g.kv_heads, g.head_dim)
+
     def read_block(self, seq_id: int, block_idx: int) -> np.ndarray:
         """Read one block back as [block_tokens, n_layers, 2, kv_heads, head_dim]."""
-        g = self.geom
-        gfn = self._blocks[seq_id][block_idx]
-        dt = np.float16 if g.dtype_bytes == 2 else np.float32
-        return self.space.view(
-            gfn, dt, (g.block_tokens, g.n_layers, 2, g.kv_heads, g.head_dim)
-        ).load()
+        return self.read_blocks(seq_id, [block_idx])[0]
+
+    def read_blocks(self, seq_id: int,
+                    block_idxs: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Read several blocks of one sequence in a single batched gather
+        (default: all of them): one residency probe, one observer
+        dispatch, one ``[n_blocks, block_tokens, n_layers, 2, kv_heads,
+        head_dim]`` result.  This is the attention hot path -- per-block
+        ``view().load()`` paid the full translate/bounds/observer stack
+        per block."""
+        with self._lock:
+            blocks = self._blocks[seq_id]
+            gfns = (list(blocks) if block_idxs is None
+                    else [blocks[i] for i in block_idxs])
+        dt, shape = self._block_dtype_shape()
+        return self.space.gather(gfns, dt, shape)
 
     # ------------------------------------------------------------- stepping
     def prepare_step(self, seq_ids: Sequence[int]):
@@ -203,7 +219,17 @@ class ElasticKVCache:
         system = self.space.system
 
         def work() -> None:
-            for gfn in gfns:
+            # one vectorized residency probe over the whole candidate set
+            # (only swapped or split MSs can need a swap-in) instead of a
+            # req lookup per block; the watermark guard stays per-MS so a
+            # long prefetch still yields to the pinned in-flight step
+            g = np.asarray(gfns, dtype=np.int64)
+            if not g.size:
+                return
+            table = system.virt.table
+            cand = ((table.pfn[g] == NO_PFN)
+                    | ((table.flags[g] & F_SPLIT) != 0))
+            for gfn in (int(x) for x in g[cand]):
                 # opportunistic: never compete with the pinned in-flight
                 # step for the last free slots
                 if system.phys.free_count <= system.watermark.low_ms:

@@ -93,6 +93,14 @@ class ElasticExpertCache:
     def get_expert(self, eid: int) -> np.ndarray:
         return self._view_of(eid).load()
 
+    def get_experts(self, eids: Sequence[int]) -> np.ndarray:
+        """Fetch several experts in one batched gather: a single
+        residency probe + observer dispatch over the whole activation
+        set, returning ``[len(eids), *expert_shape]`` (the MoE dispatch
+        hot path -- per-expert ``load()`` paid the full stack each)."""
+        gfns = [self._view_of(e).gfn for e in eids]
+        return self.space.gather(gfns, self.dtype, self.expert_shape)
+
     # ------------------------------------------------------------- routing
     def note_routing(self, expert_ids: Iterable[int]) -> None:
         """Report the router's choices: marks those experts accessed."""

@@ -83,12 +83,18 @@ class HvScheduler:
         # hot-upgrade handoff: workers re-read this every iteration
         self.loop_entry: Callable[[int], None] = self._run_cycle
         self._rr: Dict[int, List[int]] = {s: [0, 0, 0, 0] for s in range(self.n_shards)}
+        # adaptive idle backoff (SchedulerConfig.idle_backoff_max): sleep
+        # multiplier per shard; grows while cycles do no real work so an
+        # idle manager stops stealing GIL slices from foreground decode
+        self._idle_mult = [1.0] * self.n_shards
 
     # ------------------------------------------------------------- task API
     def add_task(self, shard: int, name: str, cls: int,
                  fn: Callable[[float], bool]) -> Task:
         t = Task(name, cls, fn)
         self.rqs[shard % self.n_shards].add(t)
+        # new work: snap the shard out of idle backoff at its next wakeup
+        self._idle_mult[shard % self.n_shards] = 1.0
         return t
 
     def hotplug_vcpu(self, shard: int, name: str,
@@ -144,6 +150,7 @@ class HvScheduler:
             budgets[FRONT] += budgets[BACK]
             budgets[BACK] = 0.0
         carry = 0.0
+        spent_cycle = 0.0
         for cls in (FRONT, FCPU, BACK, IDLE):
             if cls == BACK and not self._back_enabled[shard]:
                 # disabled shard: BACK must not inherit carried slices
@@ -156,13 +163,26 @@ class HvScheduler:
                          max(0.0, deadline - time.perf_counter()))
             spent_cap = budgets[cls] + carry
             unused = self._run_class(rq, shard, cls, budget)
+            spent_cycle += max(0.0, budget - unused)
             carry = max(0.0, spent_cap - (budget - unused))
         self.cycles += 1
-        # sleep out the remainder of the cycle so shares are honored in
-        # wall-clock terms even when queues are empty
+        # adaptive idle backoff: a cycle whose tasks barely ran (empty LRU
+        # slices, watermark satisfied) doubles this shard's sleep, up to
+        # idle_backoff_max cycles; any working cycle snaps it back to 1.
+        # An idle manager must not steal GIL slices from foreground decode
+        # (paper Fig 11: within 3% of native).
+        sc = self.cfg.scheduler
+        if spent_cycle < cycle_s * sc.idle_spent_frac:
+            self._idle_mult[shard] = min(self._idle_mult[shard] * 2.0,
+                                         max(1.0, sc.idle_backoff_max))
+        else:
+            self._idle_mult[shard] = 1.0
+        # sleep out the remainder of the (possibly stretched) cycle so
+        # shares are honored in wall-clock terms even when queues are empty
         elapsed = time.perf_counter() - start
-        if elapsed < cycle_s:
-            time.sleep(cycle_s - elapsed)
+        sleep_s = cycle_s * self._idle_mult[shard] - elapsed
+        if sleep_s > 0 and self._running:
+            time.sleep(sleep_s)
 
     def _run_class(self, rq: RunQueue, shard: int, cls: int, budget: float) -> float:
         """Run tasks of one class round-robin within ``budget``.

@@ -69,6 +69,16 @@ class SwapEngine:
         self._crc_on = cfg.backend.crc_enabled
         self._fast = cfg.swap.fast_fault_enabled and reqs.table.enabled
         self._readahead = cfg.swap.readahead_enabled
+        if cfg.swap.use_pallas_kernels:
+            # device data path for the batched MP copies: gather on
+            # swap-out, scatter on swap-in (kernels/swap_copy.py,
+            # interpret mode off-TPU so CI validates the kernel bodies)
+            from ..kernels import ops as _kops
+            self._kernel_gather = _kops.batch_gather
+            self._kernel_scatter = _kops.batch_scatter
+        else:
+            self._kernel_gather = None
+            self._kernel_scatter = None
         # deferred fast-path counters ride the ring flush; tell it whether
         # each fast fault performed a CRC compare
         metrics.fault_ring.count_crc = self._crc_on
@@ -582,7 +592,10 @@ class SwapEngine:
 
             ms = self.virt.phys.ms_view(pfn_now).reshape(
                 cfg.mps_per_ms, cfg.mp_bytes)
-            data = ms[idxs]                       # fancy index: a copy (5)
+            if self._kernel_gather is not None:
+                data = self._kernel_gather(ms, idxs)
+            else:
+                data = ms[idxs]                   # fancy index: a copy (5)
             kinds, crcs = self.backend.store_batch(gfn, idxs, data)
 
             with req.mp_cond:
@@ -689,7 +702,14 @@ class SwapEngine:
                 else:
                     out = _np.empty((len(idxs), cfg.mp_bytes), dtype=_np.uint8)
                     self.backend.load_batch(gfn, idxs, kinds, crcs, out)
-                    ms[idxs] = out
+                    if self._kernel_scatter is not None:
+                        # write back only the scattered rows: a racing
+                        # guest write to a non-latched MP of this frame
+                        # must not be clobbered by the pool snapshot
+                        res = self._kernel_scatter(ms, idxs, out)
+                        ms[idxs] = res[idxs]
+                    else:
+                        ms[idxs] = out
                 ok = True
             finally:
                 with req.mp_cond:

@@ -8,6 +8,7 @@ and what the framework integrations (elastic_kv / elastic_params) drive.
 """
 from __future__ import annotations
 
+import sys
 import threading
 import warnings
 from typing import Dict, List, Optional, Tuple
@@ -29,7 +30,20 @@ from .virt import NO_PFN, PhysicalMemory, VirtualizationLayer
 from .watermark import WatermarkPolicy
 
 
+# once-per-site dedup for the deprecation shims: a hot loop driving a shim
+# (a not-yet-migrated benchmark) must not pay -- or spam -- one warning per
+# call, but distinct call sites each still get their one warning.  Keyed by
+# the caller's (filename, lineno); never reset, matching the "warn once"
+# contract rather than the warnings-filter lifecycle.
+_warned_sites = set()
+
+
 def _warn_deprecated(old: str, new: str) -> None:
+    frame = sys._getframe(2)
+    site = (frame.f_code.co_filename, frame.f_lineno)
+    if site in _warned_sites:
+        return
+    _warned_sites.add(site)
     warnings.warn(f"{old} is deprecated; use {new}",
                   DeprecationWarning, stacklevel=3)
 

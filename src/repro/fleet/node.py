@@ -172,6 +172,20 @@ class NodeAgent:
         self._check_serving()
         return self.space.read(gfn, nbytes, off=off)
 
+    def write_many(self, items) -> None:
+        """Batched guest writes over (gfn, off, data) triples: one
+        serving check + one GuestSpace batch call for the whole vector
+        (the fleet wrapper's per-access share was a measurable slice of
+        fleet swap-in p90 vs single-box)."""
+        self._check_serving()
+        self.space.write_many(items)
+
+    def read_many(self, reqs) -> list:
+        """Batched guest reads over (gfn, off, nbytes) triples; see
+        :meth:`write_many`."""
+        self._check_serving()
+        return self.space.read_many(reqs)
+
     # --------------------------------------------------- migration (control)
     def export_ms(self, gfn: int):
         """Non-consuming MS image for migration (see TaijiSystem.export_ms).

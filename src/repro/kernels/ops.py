@@ -59,9 +59,35 @@ def batch_checksum(blocks: np.ndarray) -> np.ndarray:
     return np.asarray(out)
 
 
+def batch_gather(pool: np.ndarray, indices: np.ndarray) -> np.ndarray:
+    """Host entry for the swap-copy gather: ``out[i] = pool[indices[i]]``.
+
+    ``pool`` is an (n_pool, elems) uint8 view of a physical MS frame; the
+    indices are scalar-prefetched so the DMA engine knows each source
+    block before its grid step (the device analogue of the EPT-walked
+    batched swap-out copy).
+    """
+    out = gather_blocks(jnp.asarray(pool), jnp.asarray(indices, jnp.int32),
+                        interpret=default_interpret())
+    return np.asarray(out)
+
+
+def batch_scatter(pool: np.ndarray, indices: np.ndarray,
+                  blocks: np.ndarray) -> np.ndarray:
+    """Host entry for the swap-copy scatter: ``pool[indices[i]] = blocks[i]``.
+
+    Returns the updated pool as a host array (the device aliases the pool
+    buffer in place; the host wrapper materializes the result for the
+    caller to store back into the frame).
+    """
+    out = scatter_blocks(jnp.asarray(pool), jnp.asarray(indices, jnp.int32),
+                         jnp.asarray(blocks), interpret=default_interpret())
+    return np.asarray(out)
+
+
 __all__ = [
     "zero_detect", "block_quantize", "block_dequantize",
     "fletcher_checksum", "gather_blocks", "scatter_blocks",
     "paged_decode_attention", "on_tpu", "default_interpret",
-    "batch_zero_detect", "batch_checksum",
+    "batch_zero_detect", "batch_checksum", "batch_gather", "batch_scatter",
 ]

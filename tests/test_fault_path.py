@@ -47,7 +47,7 @@ def mixed_ms(cfg, seed):
 def test_descriptor_table_registered_and_consistent():
     s = fresh()
     g = s.guest_alloc_ms()
-    s.write(s.ms_addr(g), mixed_ms(s.cfg, 1))
+    s.guest.write(g, mixed_ms(s.cfg, 1))
     s.engine.swap_out_ms(g)
     ft = s.reqs.table
     req = s.reqs.lookup(g)
@@ -69,9 +69,9 @@ def test_descriptor_table_registered_and_consistent():
 def test_descriptor_unregistered_on_free():
     s = fresh()
     g = s.guest_alloc_ms()
-    s.write(s.ms_addr(g), mixed_ms(s.cfg, 2))
+    s.guest.write(g, mixed_ms(s.cfg, 2))
     s.engine.swap_out_ms(g)
-    s.read(s.ms_addr(g), s.cfg.ms_bytes)           # fault everything back
+    s.guest.read(g, s.cfg.ms_bytes)           # fault everything back
     s.guest_free_ms(g)
     assert s.reqs.table.reqs[g] is None
     assert int(s.reqs.table.hdr[g]) == -1
@@ -83,7 +83,7 @@ def test_zero_fast_path_resolves_and_counts():
     s = fresh()
     g = s.guest_alloc_ms()                          # zero-filled
     s.engine.swap_out_ms(g)
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
+    assert s.guest.read(g, s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
     s.metrics.sync()
     assert s.metrics.fault_fast_path == s.cfg.mps_per_ms
     assert s.metrics.fault_zero_pages == s.cfg.mps_per_ms
@@ -105,7 +105,7 @@ def test_fast_path_first_in_allocates_exactly_once():
 
     def reader(mp):
         try:
-            got = s.read(s.ms_addr(g, mp=mp), s.cfg.mp_bytes)
+            got = s.guest.read(g, s.cfg.mp_bytes, off=mp * s.cfg.mp_bytes)
             assert got == bytes(s.cfg.mp_bytes)
         except Exception as e:          # pragma: no cover
             errs.append(e)
@@ -133,11 +133,11 @@ def test_fast_vs_scalar_reference_equivalence():
         s = fresh(**({} if swap_cfg is None else {"swap": swap_cfg}))
         g = s.guest_alloc_ms()
         data = data or mixed_ms(s.cfg, 11)
-        s.write(s.ms_addr(g), data)
+        s.guest.write(g, data)
         s.engine.swap_out_ms(g)
         # touch MPs one at a time through the guest read path
         got = b"".join(
-            s.read(s.ms_addr(g, mp=mp), s.cfg.mp_bytes)
+            s.guest.read(g, s.cfg.mp_bytes, off=mp * s.cfg.mp_bytes)
             for mp in range(s.cfg.mps_per_ms))
         rec = s.reqs.lookup(g).record
         finals[swap_cfg is None] = (got, rec.state, rec.present_count,
@@ -158,7 +158,7 @@ def test_fast_path_detects_crc_corruption():
     rec = s.reqs.lookup(g).record
     rec.crc[3] = 0xDEADBEEF                         # corrupt the record CRC
     with pytest.raises(CorruptionError):
-        s.read(s.ms_addr(g, mp=3), 16)
+        s.guest.read(g, 16, off=3 * s.cfg.mp_bytes)
     assert s.metrics.crc_failures >= 1
     s.close()
 
@@ -169,7 +169,7 @@ def test_fault_vs_swap_out_race_on_descriptor_table():
     s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=2))
     g = s.guest_alloc_ms()
     data = mixed_ms(s.cfg, 21)
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
 
     orig = s.backend.store_batch
     started = threading.Event()
@@ -193,13 +193,13 @@ def test_fault_vs_swap_out_race_on_descriptor_table():
     # compressed MPs cancel the writer through the locked path
     for mp in range(s.cfg.mps_per_ms):
         off = mp * s.cfg.mp_bytes
-        assert s.read(s.ms_addr(g) + off, s.cfg.mp_bytes) == \
+        assert s.guest.read(g, s.cfg.mp_bytes, off=off) == \
             data[off:off + s.cfg.mp_bytes]
     w.join(5)
     assert done.is_set()
     rec = s.reqs.lookup(g).record
     assert np.all(rec.bm_in == 0)
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     assert rec.state == MS_RESIDENT
     assert rec.present_count == s.cfg.mps_per_ms
     s.reqs.check_invariants()
@@ -235,7 +235,7 @@ def test_fast_faults_during_swap_out_do_not_merge_prematurely():
                 and (rec.bm_out.any() or rec.bm_in.any()))
     assert np.all(rec.bm_in == 0)
     # the remaining MPs fault back in cleanly and the MS converges
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
+    assert s.guest.read(g, s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
     assert rec.state == MS_RESIDENT
     assert rec.present_count == s.cfg.mps_per_ms
     assert not rec.bm_out.any()
@@ -250,7 +250,7 @@ def test_quiesce_diverts_fast_path_to_locked_path():
     g = s.guest_alloc_ms()                          # zero-filled
     s.engine.swap_out_ms(g)
     s.reqs.quiesce_fast_faults(g)
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
+    assert s.guest.read(g, s.cfg.ms_bytes) == bytes(s.cfg.ms_bytes)
     s.metrics.sync()
     assert s.metrics.fault_fast_path == 0           # all via the locked path
     assert s.metrics.fault_zero_pages == s.cfg.mps_per_ms
@@ -263,7 +263,7 @@ def test_fast_fault_during_batched_prefetch_chunks():
     s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=2))
     g = s.guest_alloc_ms()
     data = mixed_ms(s.cfg, 41)
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g)
     rec = s.reqs.lookup(g).record
     # a zero MP that lands in a later chunk than the first
@@ -286,7 +286,7 @@ def test_fast_fault_during_batched_prefetch_chunks():
     assert rec.state == MS_RESIDENT
     assert rec.present_count == s.cfg.mps_per_ms
     assert s.metrics.mp_swapped_in == s.cfg.mps_per_ms   # exactly once
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     s.close()
 
 
@@ -295,11 +295,11 @@ def test_readahead_materializes_whole_extent():
     s = fresh()
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0xAB, np.uint8))   # all compressible
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     faults_before = s.metrics.faults
     # one fault into the extent materializes every sibling row
-    assert s.read(s.ms_addr(g, mp=2), s.cfg.mp_bytes) == \
+    assert s.guest.read(g, s.cfg.mp_bytes, off=2 * s.cfg.mp_bytes) == \
         data[2 * s.cfg.mp_bytes:3 * s.cfg.mp_bytes]
     assert s.metrics.faults == faults_before + 1
     assert s.metrics.readahead_extents == 1
@@ -309,7 +309,7 @@ def test_readahead_materializes_whole_extent():
     assert rec.present_count == s.cfg.mps_per_ms
     assert not s.backend._extents                    # fully consumed
     # no further faults: everything is already resident
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     assert s.metrics.faults == faults_before + 1
     s.close()
 
@@ -319,19 +319,19 @@ def test_readahead_respects_in_flight_and_resident_sibling():
     s = fresh(swap=SwapConfig(readahead_enabled=False))
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0x3C, np.uint8))
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     # scalar-fault one row first (readahead off), then re-enable
-    assert s.read(s.ms_addr(g, mp=0), s.cfg.mp_bytes) == \
+    assert s.guest.read(g, s.cfg.mp_bytes) == \
         data[:s.cfg.mp_bytes]
     s.engine._readahead = True
     overwrite = b"\x55" * 8
-    s.write(s.ms_addr(g, mp=0), overwrite)           # dirty the resident MP
-    assert s.read(s.ms_addr(g, mp=3), s.cfg.mp_bytes) == \
+    s.guest.write(g, overwrite)           # dirty the resident MP
+    assert s.guest.read(g, s.cfg.mp_bytes, off=3 * s.cfg.mp_bytes) == \
         data[3 * s.cfg.mp_bytes:4 * s.cfg.mp_bytes]
     # readahead materialized the swapped rows but left MP 0's new bytes
-    assert s.read(s.ms_addr(g, mp=0), 8) == overwrite
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == \
+    assert s.guest.read(g, 8) == overwrite
+    assert s.guest.read(g, s.cfg.ms_bytes) == \
         overwrite + data[8:]
     s.close()
 
@@ -344,13 +344,13 @@ def test_readahead_bytes_identical_vs_scalar_path():
                                   readahead_enabled=readahead))
         g = s.guest_alloc_ms()
         data = data or mixed_ms(s.cfg, 31)
-        s.write(s.ms_addr(g), data)
+        s.guest.write(g, data)
         s.engine.swap_out_ms(g, batched=True)
         # drive through single-MP faults in a scattered order
         order = [5, 1, 7, 3, 0, 6, 2, 4][:s.cfg.mps_per_ms]
         for mp in order:
-            s.read(s.ms_addr(g, mp=mp), 8)
-        got[readahead] = s.read(s.ms_addr(g), s.cfg.ms_bytes)
+            s.guest.read(g, 8, off=mp * s.cfg.mp_bytes)
+        got[readahead] = s.guest.read(g, s.cfg.ms_bytes)
         rec = s.reqs.lookup(g).record
         assert rec.state == MS_RESIDENT
         assert np.all(rec.kinds == K_NONE)
@@ -364,7 +364,7 @@ def test_readahead_corrupt_sibling_does_not_poison_fault():
     s = fresh()
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0x5C, np.uint8))
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     rec = s.reqs.lookup(g).record
     bad_mp = 4
@@ -373,12 +373,12 @@ def test_readahead_corrupt_sibling_does_not_poison_fault():
     key = next(iter(s.backend._extents))
     s.backend._extents[key].crc ^= 1
     good_mp = 1
-    assert s.read(s.ms_addr(g, mp=good_mp), s.cfg.mp_bytes) == \
+    assert s.guest.read(g, s.cfg.mp_bytes, off=good_mp * s.cfg.mp_bytes) == \
         data[good_mp * s.cfg.mp_bytes:(good_mp + 1) * s.cfg.mp_bytes]
     assert s.metrics.crc_failures >= 1
     assert rec.is_swapped_out(bad_mp)       # left swapped, still detectable
     with pytest.raises(CorruptionError):
-        s.read(s.ms_addr(g, mp=bad_mp), 8)
+        s.guest.read(g, 8, off=bad_mp * s.cfg.mp_bytes)
     s.close()
 
 
@@ -389,7 +389,7 @@ def test_corrupt_mp_keeps_failing_on_retry():
     g = s.guest_alloc_ms()
     rng = np.random.default_rng(17)
     data = rng.integers(0, 256, s.cfg.ms_bytes).astype(np.uint8).tobytes()
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=False)    # standalone per-MP blobs
     key, entry = next((k, e) for k, e in s.backend._compressed.items()
                       if e[0] == "v")
@@ -399,7 +399,7 @@ def test_corrupt_mp_keeps_failing_on_retry():
     mp = key[1]
     for _attempt in range(2):
         with pytest.raises(CorruptionError):
-            s.read(s.ms_addr(g, mp=mp), 8)
+            s.guest.read(g, 8, off=mp * s.cfg.mp_bytes)
     assert s.metrics.crc_failures >= 2
     s.close()
 

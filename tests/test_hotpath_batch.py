@@ -1,0 +1,361 @@
+"""Batched guest hot path (ISSUE 6).
+
+Pins the contracts the batch primitives were built on:
+
+  * ``read_many``/``write_many``/``gather``/``scatter`` are
+    byte-equivalent to the scalar loops they replace, across mixed MS
+    states (resident, swapped, split, zero, never-written);
+  * observers see the same event stream from a batch call as from the
+    equivalent scalar sequence (``on_access_batch`` default fallback),
+    so a TraceRecorder capture is identical either way;
+  * parallel extent compression stores byte-identical backend state for
+    any worker count (ordered merge over fixed chunk boundaries);
+  * ``HotPathConfig`` consolidates the scalar flags: legacy aliases
+    still construct/read correctly and old pickles migrate.
+
+Fuzzing uses hypothesis when available and falls back to a seeded
+numpy sweep (the container does not ship hypothesis).
+"""
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.config import (BackendConfig, HotPathConfig, SwapConfig,
+                               small_test_config)
+from repro.core.guest import GuestObserver
+from repro.core.system import TaijiSystem
+from repro.fleet.trace import TraceRecorder
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # container has no hypothesis
+    HAVE_HYPOTHESIS = False
+
+FUZZ_SEEDS = list(range(8))
+
+
+def _mixed_system(seed: int):
+    """A system whose MSs cover every state the fast path branches on:
+    resident random, resident compressible, swapped-out, split (one MP
+    faulted back), explicit zeros, and never-written. Returns the
+    system, the gfn list, and a shadow dict of expected contents."""
+    s = TaijiSystem(small_test_config())
+    rng = np.random.default_rng(seed)
+    ms = s.cfg.ms_bytes
+    gfns = [s.guest.alloc_ms() for _ in range(6)]
+    shadow = {}
+    shadow[gfns[0]] = rng.integers(0, 256, ms, dtype=np.uint8).tobytes()
+    shadow[gfns[1]] = bytes([7]) * ms                    # compressible
+    shadow[gfns[2]] = rng.integers(0, 256, ms, dtype=np.uint8).tobytes()
+    shadow[gfns[3]] = bytes(ms)                          # explicit zeros
+    shadow[gfns[4]] = bytes(ms)                          # never written
+    shadow[gfns[5]] = rng.integers(0, 256, ms, dtype=np.uint8).tobytes()
+    for g in (gfns[0], gfns[1], gfns[2], gfns[3], gfns[5]):
+        s.guest.write(g, shadow[g])
+    s.engine.swap_out_ms(gfns[1])                        # fully swapped
+    s.engine.swap_out_ms(gfns[2])
+    s.guest.read(gfns[2], 8)                             # -> split MS
+    return s, gfns, shadow
+
+
+def _random_reqs(rng, gfns, ms_bytes, n=40):
+    reqs = []
+    for _ in range(n):
+        g = gfns[int(rng.integers(len(gfns)))]
+        off = int(rng.integers(ms_bytes))
+        nbytes = int(rng.integers(ms_bytes - off + 1))
+        reqs.append((g, off, nbytes))
+    return reqs
+
+
+def _check_read_equivalence(seed: int) -> None:
+    s, gfns, shadow = _mixed_system(seed)
+    try:
+        rng = np.random.default_rng(seed + 1000)
+        reqs = _random_reqs(rng, gfns, s.cfg.ms_bytes)
+        batched = s.guest.read_many(reqs)
+        assert len(batched) == len(reqs)
+        for (g, off, n), got in zip(reqs, batched):
+            assert got == shadow[g][off:off + n]
+            assert got == s.guest.read(g, n, off=off)    # scalar agrees
+    finally:
+        s.close()
+
+
+def _check_write_equivalence(seed: int) -> None:
+    sa, gfns_a, _ = _mixed_system(seed)
+    sb, gfns_b, _ = _mixed_system(seed)
+    try:
+        rng = np.random.default_rng(seed + 2000)
+        items = [(g, off, bytes(rng.integers(0, 256, n, dtype=np.uint8)))
+                 for g, off, n in _random_reqs(rng, gfns_a, sa.cfg.ms_bytes)]
+        sa.guest.write_many(items)
+        for g, off, data in items:                        # scalar reference
+            sb.guest.write(g, data, off=off)
+        for ga, gb in zip(gfns_a, gfns_b):
+            assert sa.guest.read(ga) == sb.guest.read(gb)
+    finally:
+        sa.close()
+        sb.close()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_read_many_matches_scalar(seed):
+        _check_read_equivalence(seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_write_many_matches_scalar(seed):
+        _check_write_equivalence(seed)
+else:
+    @pytest.mark.parametrize("seed", FUZZ_SEEDS)
+    def test_read_many_matches_scalar(seed):
+        _check_read_equivalence(seed)
+
+    @pytest.mark.parametrize("seed", FUZZ_SEEDS)
+    def test_write_many_matches_scalar(seed):
+        _check_write_equivalence(seed)
+
+
+def test_gather_matches_view_loads():
+    s, gfns, shadow = _mixed_system(3)
+    try:
+        got = s.guest.gather(gfns)                       # whole MSs, uint8
+        assert got.shape == (len(gfns), s.cfg.ms_bytes)
+        for i, g in enumerate(gfns):
+            assert got[i].tobytes() == shadow[g]
+        # typed window: float16 rows at an offset
+        shape = (16,)
+        off = 64
+        typed = s.guest.gather(gfns, np.float16, shape, off=off)
+        for i, g in enumerate(gfns):
+            ref = s.guest.view(g, np.float16, shape, off=off).load()
+            np.testing.assert_array_equal(typed[i], ref)
+    finally:
+        s.close()
+
+
+def test_scatter_matches_view_stores():
+    sa, gfns_a, _ = _mixed_system(4)
+    sb, gfns_b, _ = _mixed_system(4)
+    try:
+        rng = np.random.default_rng(4)
+        arr = rng.integers(0, 256, (len(gfns_a), 128), dtype=np.uint8)
+        sa.guest.scatter(gfns_a, arr, off=32)
+        for i, g in enumerate(gfns_b):
+            sb.guest.view(g, np.uint8, (128,), off=32).store(arr[i])
+        for ga, gb in zip(gfns_a, gfns_b):
+            assert sa.guest.read(ga) == sb.guest.read(gb)
+    finally:
+        sa.close()
+        sb.close()
+
+
+def test_batch_bounds_and_shape_errors():
+    s = TaijiSystem(small_test_config())
+    try:
+        g = s.guest.alloc_ms()
+        ms = s.cfg.ms_bytes
+        with pytest.raises(ValueError):
+            s.guest.read_many([(g, 0, 8), (g, ms - 4, 8)])
+        with pytest.raises(ValueError):
+            s.guest.read_many([(g, -1, 4)])
+        with pytest.raises(ValueError):
+            s.guest.write_many([(g, ms, b"")])           # off must be in-MS
+        with pytest.raises(ValueError):
+            s.guest.gather([g], np.uint8, (ms + 1,))
+        with pytest.raises(ValueError):
+            s.guest.scatter([g, g], np.zeros((1, 8), np.uint8))
+        assert s.guest.read_many([]) == []
+        s.guest.write_many([])                           # no-op, no error
+    finally:
+        s.close()
+
+
+# ---------------------------------------------------------------- observers
+class _BatchLog(GuestObserver):
+    """Observer with the batch hook: records one entry per batch call."""
+
+    def __init__(self):
+        self.batches = []
+        self.scalar_events = []
+
+    def on_access(self, gfn, off, nbytes, is_write, data=None):
+        self.scalar_events.append((gfn, off, nbytes, is_write, data))
+
+    def on_access_batch(self, events):
+        self.batches.append(list(events))
+
+
+class _ScalarOnlyLog(GuestObserver):
+    """Observer without the batch hook: exercises the default fallback."""
+
+    def __init__(self):
+        self.events = []
+
+    def on_access(self, gfn, off, nbytes, is_write, data=None):
+        self.events.append((gfn, off, nbytes, is_write, data))
+
+
+def test_batch_observer_gets_one_call_per_batch():
+    s, gfns, shadow = _mixed_system(5)
+    try:
+        log = s.guest.attach(_BatchLog())
+        reqs = [(gfns[0], 0, 8), (gfns[1], 16, 4), (gfns[4], 0, 2)]
+        out = s.guest.read_many(reqs)
+        assert len(log.batches) == 1
+        assert log.batches[0] == [
+            (g, off, n, False, out[i])
+            for i, (g, off, n) in enumerate(reqs)]
+        assert log.scalar_events == []                   # batch hook won
+    finally:
+        s.close()
+
+
+def test_scalar_only_observer_sees_equivalent_event_stream():
+    """The default on_access_batch fallback replays scalar on_access in
+    batch order -- a scalar-hook-only observer cannot tell a batch call
+    from the equivalent scalar loop."""
+    sa, gfns_a, _ = _mixed_system(6)
+    sb, gfns_b, _ = _mixed_system(6)
+    try:
+        la = sa.guest.attach(_ScalarOnlyLog())
+        lb = sb.guest.attach(_ScalarOnlyLog())
+        reqs = [(gfns_a[0], 0, 8), (gfns_a[2], 32, 16), (gfns_a[3], 0, 4)]
+        sa.guest.read_many(reqs)
+        for g, off, n in reqs:
+            sb.guest.read(g, n, off=off)
+        assert la.events == lb.events
+    finally:
+        sa.close()
+        sb.close()
+
+
+def test_trace_recorder_capture_identical_batch_vs_scalar():
+    """TraceRecorder (scalar hooks only) captures byte-identical trace
+    lines whether the workload used batch primitives or scalar calls."""
+    sa, gfns_a, _ = _mixed_system(7)
+    sb, gfns_b, _ = _mixed_system(7)
+    try:
+        ra = sa.guest.attach(TraceRecorder.for_space(sa.guest))
+        rb = sb.guest.attach(TraceRecorder.for_space(sb.guest))
+        payload = bytes(range(64))
+        # batch workload on A
+        sa.guest.write_many([(gfns_a[0], 0, payload),
+                             (gfns_a[1], 128, payload)])
+        sa.guest.read_many([(gfns_a[0], 0, 64), (gfns_a[1], 128, 64)])
+        # scalar workload on B
+        sb.guest.write(gfns_b[0], payload)
+        sb.guest.write(gfns_b[1], payload, off=128)
+        sb.guest.read(gfns_b[0], 64)
+        sb.guest.read(gfns_b[1], 64, off=128)
+        assert ra.lines()[1:] == rb.lines()[1:]
+    finally:
+        sa.close()
+        sb.close()
+
+
+# ------------------------------------------- parallel compression determinism
+def _backend_image(s, gfn):
+    """Byte-stable image of one MS's backend state: standalone entries
+    plus extent payloads/row maps in eid order."""
+    be = s.backend
+    standalone = sorted(
+        (mp, entry) for (g, mp), entry in be._compressed.items()
+        if g == gfn and entry[0] != "x")
+    refs = sorted(
+        (mp, entry[1], entry[2]) for (g, mp), entry in be._compressed.items()
+        if g == gfn and entry[0] == "x")
+    extents = sorted(
+        (eid, ext.payload, tuple(ext.mps), ext.crc)
+        for (g, eid), ext in be._extents.items() if g == gfn)
+    return standalone, refs, extents
+
+
+def _swap_out_image(workers: int):
+    """Fill one MS with seeded random bytes, swap it out under the given
+    compress_workers, and return (backend image, roundtrip-read, data)."""
+    cfg = small_test_config(
+        ms_bytes=32 * 1024, mps_per_ms=32,
+        backend=BackendConfig(extent_max_rows=4),
+        swap=SwapConfig(hot_path=HotPathConfig(compress_workers=workers)))
+    s = TaijiSystem(cfg)
+    try:
+        rng = np.random.default_rng(11)
+        g = s.guest.alloc_ms()
+        # compressible non-zero rows (pure random would store verbatim and
+        # never form extents): short random motifs repeated per MP
+        mp = cfg.mp_bytes
+        data = b"".join(
+            rng.integers(1, 256, 32, dtype=np.uint8).tobytes() * (mp // 32)
+            for _ in range(cfg.mps_per_ms))
+        s.guest.write(g, data)
+        s.engine.swap_out_ms(g)                # 32 rows -> 8 extents
+        image = _backend_image(s, g)
+        back = s.guest.read(g)
+        assert s.metrics.crc_failures == 0
+        return image, back, data
+    finally:
+        s.close()
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_parallel_compression_stores_identical_bytes(workers):
+    """Chunk boundaries are fixed by extent_max_rows and the pool merges
+    in submission order, so the stored backend state is byte-identical
+    for any compress_workers value (0 = serial reference)."""
+    ref_image, ref_back, data = _swap_out_image(0)
+    assert len(ref_image[2]) > 1               # really multi-extent
+    assert ref_back == data                    # serial path round-trips
+    image, back, _ = _swap_out_image(workers)
+    assert image == ref_image
+    assert back == data
+
+
+# ------------------------------------------------------------- HotPathConfig
+def test_hot_path_defaults_and_legacy_scalar():
+    hp = HotPathConfig()
+    assert hp.fast_fault and hp.readahead
+    assert not hp.pallas_kernels
+    assert hp.compress_workers > 1
+    ref = HotPathConfig.legacy_scalar()
+    assert not (ref.fast_fault or ref.readahead or ref.pallas_kernels)
+    assert ref.compress_workers == 0
+
+
+def test_swap_config_legacy_aliases_mirror_hot_path():
+    sc = SwapConfig(fast_fault_enabled=False, readahead_enabled=False)
+    assert sc.hot_path.fast_fault is False
+    assert sc.hot_path.readahead is False
+    assert sc.fast_fault_enabled is False and sc.readahead_enabled is False
+    # hot_path passed directly: aliases read back from it
+    sc2 = SwapConfig(hot_path=HotPathConfig.legacy_scalar())
+    assert sc2.use_pallas_kernels is False
+    assert sc2.fast_fault_enabled is False
+    # dataclasses.replace with a legacy flag (how call sites toggle):
+    # the explicit legacy value wins over the carried-along hot_path
+    sc3 = dataclasses.replace(sc2, fast_fault_enabled=True)
+    assert sc3.hot_path.fast_fault is True
+    assert sc3.hot_path.readahead is False               # rest untouched
+
+
+def test_swap_config_pickle_roundtrip_and_legacy_state():
+    sc = SwapConfig(fast_fault_enabled=False)
+    back = pickle.loads(pickle.dumps(sc))
+    assert back == sc
+    assert back.hot_path.fast_fault is False
+    # a state dict from before hot_path existed (old pickle layout):
+    # __setstate__ must synthesize the HotPathConfig from the scalars
+    old = SwapConfig.__new__(SwapConfig)
+    old.__setstate__({"batch_enabled": True, "batch_mps": 32,
+                      "fast_fault_enabled": False,
+                      "readahead_enabled": True,
+                      "use_pallas_kernels": False})
+    assert old.hot_path == HotPathConfig(fast_fault=False)
+    assert old.batch_mps == 32

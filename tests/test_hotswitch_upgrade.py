@@ -85,7 +85,7 @@ def test_hot_upgrade_under_load_carries_state():
 
     # swap some memory out under v1 so there is real metadata to inherit
     data = bytes(range(256)) * (system.cfg.ms_bytes // 256)
-    system.write(system.ms_addr(pfns[1]), data)
+    system.guest.write(pfns[1], data)
     entry.call("swap_out_ms", pfns[1])
 
     sv = Service(plain, 0, pfns[2:])
@@ -100,7 +100,7 @@ def test_hot_upgrade_under_load_carries_state():
     assert entry.call("version") == 2
     assert system.module_version == 2
     # v1's swapped-out metadata is directly usable by v2 (no conversion)
-    assert system.read(system.ms_addr(pfns[1]), len(data)) == data
+    assert system.guest.read(pfns[1], len(data)) == data
     system.close()
 
 

@@ -18,7 +18,7 @@ def fresh(**kw):
 def fill(s, g, seed):
     data = np.random.default_rng(seed).integers(
         0, 256, s.cfg.ms_bytes).astype(np.uint8).tobytes()
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     return data
 
 
@@ -30,7 +30,7 @@ def test_full_swap_roundtrip_exact():
     assert s.engine.swap_out_ms(g) == s.cfg.mps_per_ms
     req = s.reqs.lookup(g)
     assert req.record.state == MS_SWAPPED
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     # reading every MP merged the MS back
     assert req.record.state == MS_RESIDENT
     assert s.metrics.ms_swapped_in == 1
@@ -41,7 +41,7 @@ def test_zero_pages_take_zero_backend():
     g = s.guest_alloc_ms()                 # zero-filled by alloc
     s.engine.swap_out_ms(g)
     assert s.metrics.backend_zero_mps == s.cfg.mps_per_ms
-    assert s.read(s.ms_addr(g), 32) == b"\x00" * 32
+    assert s.guest.read(g, 32) == b"\x00" * 32
 
 
 def test_partial_fault_leaves_consistent_split_state():
@@ -51,14 +51,14 @@ def test_partial_fault_leaves_consistent_split_state():
     s.engine.swap_out_ms(g)
     # fault only MP 3
     off = 3 * s.cfg.mp_bytes
-    got = s.read(s.ms_addr(g) + off, s.cfg.mp_bytes)
+    got = s.guest.read(g, s.cfg.mp_bytes, off=off)
     assert got == data[off : off + s.cfg.mp_bytes]
     rec = s.reqs.lookup(g).record
     assert rec.state == MS_PARTIAL
     assert rec.present_count == 1
     assert s.virt.table.is_split(g)
     # remaining MPs still load fine
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     assert rec.state == MS_RESIDENT
     assert not s.virt.table.is_split(g)
 
@@ -93,7 +93,7 @@ def test_crc_detects_backend_corruption():
     s.engine.swap_out_ms(g)
     corrupt_one_stored_mp(s.backend)
     with pytest.raises(CorruptionError):
-        s.read(s.ms_addr(g), s.cfg.ms_bytes)
+        s.guest.read(g, s.cfg.ms_bytes)
     assert s.metrics.crc_failures >= 1
 
 
@@ -117,7 +117,7 @@ def test_overcommit_beyond_physical():
         payload[g] = fill(s, g, 100 + i)
     assert len(payload) > (cfg.n_phys_ms - cfg.mpool_reserve_ms) * 1.4
     for g, data in payload.items():
-        assert s.read(s.ms_addr(g), cfg.ms_bytes) == data
+        assert s.guest.read(g, cfg.ms_bytes) == data
     assert s.metrics.ms_swapped_out > 0
 
 
@@ -149,7 +149,7 @@ def test_concurrent_faults_same_ms_exactly_once():
     def reader(mp):
         try:
             off = mp * s.cfg.mp_bytes
-            got = s.read(s.ms_addr(g) + off, s.cfg.mp_bytes)
+            got = s.guest.read(g, s.cfg.mp_bytes, off=off)
             assert got == data[off : off + s.cfg.mp_bytes]
         except Exception as e:          # pragma: no cover
             errs.append(e)
@@ -189,7 +189,7 @@ def test_reader_cancels_writer():
     w = threading.Thread(target=writer)
     w.start()
     time.sleep(0.004)                   # let it swap a couple of MPs
-    got = s.read(s.ms_addr(g), s.cfg.mp_bytes)   # reader bumps the writer
+    got = s.guest.read(g, s.cfg.mp_bytes)   # reader bumps the writer
     assert got == data[: s.cfg.mp_bytes]
     w.join(5)
     assert done.is_set()
@@ -210,7 +210,7 @@ def test_parallel_swaps_different_ms():
 
     def worker(g):
         try:
-            assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == datas[g]
+            assert s.guest.read(g, s.cfg.ms_bytes) == datas[g]
         except Exception as e:          # pragma: no cover
             errs.append(e)
 

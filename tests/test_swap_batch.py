@@ -77,7 +77,7 @@ def test_swap_out_state_identical_to_scalar():
         s = fresh()
         g = s.guest_alloc_ms()
         data = data or mixed_ms(s.cfg, 11)
-        s.write(s.ms_addr(g), data)
+        s.guest.write(g, data)
         assert s.engine.swap_out_ms(g, batched=batched) == s.cfg.mps_per_ms
         views[batched] = record_view(s, g)
         s.close()
@@ -96,14 +96,14 @@ def test_roundtrip_bytes_identical_all_path_combinations():
             s = fresh()
             g = s.guest_alloc_ms()
             data = mixed_ms(s.cfg, 7)
-            s.write(s.ms_addr(g), data)
+            s.guest.write(g, data)
             s.engine.swap_out_ms(g, batched=out_b)
             s.engine.swap_in_ms(g, batched=in_b)
             rec = s.reqs.lookup(g).record
             assert rec.state == MS_RESIDENT
             assert rec.present_count == s.cfg.mps_per_ms
             assert np.all(rec.kinds == K_NONE)
-            assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data, (out_b, in_b)
+            assert s.guest.read(g, s.cfg.ms_bytes) == data, (out_b, in_b)
             s.close()
 
 
@@ -112,12 +112,12 @@ def test_batched_swap_out_then_scalar_faults():
     s = fresh()
     g = s.guest_alloc_ms()
     data = mixed_ms(s.cfg, 5)
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     # touch MPs one at a time through the guest read path
     for mp in range(s.cfg.mps_per_ms):
         off = mp * s.cfg.mp_bytes
-        assert s.read(s.ms_addr(g) + off, s.cfg.mp_bytes) == \
+        assert s.guest.read(g, s.cfg.mp_bytes, off=off) == \
             data[off:off + s.cfg.mp_bytes]
     assert s.reqs.lookup(g).record.state == MS_RESIDENT
     s.close()
@@ -127,15 +127,15 @@ def test_partial_batched_swap_in_leaves_partial_state():
     s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=3))
     g = s.guest_alloc_ms()
     data = mixed_ms(s.cfg, 9)
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g)
     # fault one MP first so the batched prefetch starts from PARTIAL
-    assert s.read(s.ms_addr(g), s.cfg.mp_bytes) == data[:s.cfg.mp_bytes]
+    assert s.guest.read(g, s.cfg.mp_bytes) == data[:s.cfg.mp_bytes]
     rec = s.reqs.lookup(g).record
     assert rec.state == MS_PARTIAL
     assert s.engine.swap_in_ms(g, batched=True) == s.cfg.mps_per_ms - 1
     assert rec.state == MS_RESIDENT
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     s.close()
 
 
@@ -149,7 +149,7 @@ def test_zero_ms_stores_no_backend_bytes():
     assert s.backend.stored_bytes() == 0
     assert s.metrics.backend_zero_mps == s.cfg.mps_per_ms
     s.engine.swap_in_ms(g, batched=True)
-    assert s.read(s.ms_addr(g), 64) == b"\x00" * 64
+    assert s.guest.read(g, 64) == b"\x00" * 64
     s.close()
 
 
@@ -157,7 +157,7 @@ def test_compressible_ms_uses_extent_and_compresses():
     s = fresh()
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0xAB, np.uint8))
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     rec = s.reqs.lookup(g).record
     assert np.all(rec.kinds == K_COMPRESSED)
@@ -165,7 +165,7 @@ def test_compressible_ms_uses_extent_and_compresses():
     assert s.backend.stored_bytes() < s.cfg.ms_bytes // 4
     s.engine.swap_in_ms(g, batched=True)
     assert not s.backend._extents          # fully consumed
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     s.close()
 
 
@@ -187,7 +187,7 @@ def test_crc_mismatch_injection_batched_swap_in():
     s = fresh()
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0x5C, np.uint8))
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     # corrupt the extent payload (cache it raw first: a corrupted zlib
     # stream would fail in inflate, which is not the check under test)
@@ -205,10 +205,10 @@ def test_crc_mismatch_injection_batched_swap_in():
     bad_row = (len(raw) // 2) // s.cfg.mp_bytes
     good_row = 0 if bad_row != 0 else 1
     off = good_row * s.cfg.mp_bytes
-    assert s.read(s.ms_addr(g) + off, s.cfg.mp_bytes) == \
+    assert s.guest.read(g, s.cfg.mp_bytes, off=off) == \
         data[off:off + s.cfg.mp_bytes]
     with pytest.raises(CorruptionError):
-        s.read(s.ms_addr(g) + bad_row * s.cfg.mp_bytes, s.cfg.mp_bytes)
+        s.guest.read(g, s.cfg.mp_bytes, off=bad_row * s.cfg.mp_bytes)
     s.close()
 
 
@@ -216,7 +216,7 @@ def test_crc_mismatch_injection_scalar_fault_on_batched_store():
     s = fresh()
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0x5C, np.uint8))
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     key = next(iter(s.backend._extents))
     ext = s.backend._extents[key]
@@ -225,7 +225,7 @@ def test_crc_mismatch_injection_scalar_fault_on_batched_store():
     ext.payload = bytes(raw)
     ext.is_raw = True
     with pytest.raises(CorruptionError):
-        s.read(s.ms_addr(g), s.cfg.ms_bytes)
+        s.guest.read(g, s.cfg.ms_bytes)
     assert s.metrics.crc_failures >= 1
     s.close()
 
@@ -242,12 +242,12 @@ def test_disk_tier_kind_selection_matches_scalar(tmp_path):
             disk_fallback_path=str(tmp_path / f"tier-{batched}.bin")))
         g = s.guest_alloc_ms()
         data = data or mixed_ms(s.cfg, 13)
-        s.write(s.ms_addr(g), data)
+        s.guest.write(g, data)
         s.engine.swap_out_ms(g, batched=batched)
         views[batched] = record_view(s, g)
         assert not s.backend._extents
         s.engine.swap_in_ms(g, batched=batched)
-        assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+        assert s.guest.read(g, s.cfg.ms_bytes) == data
         s.close()
     assert np.array_equal(views[False]["kinds"], views[True]["kinds"])
     assert np.array_equal(views[False]["crc"], views[True]["crc"])
@@ -262,11 +262,11 @@ def test_stored_bytes_stable_after_partial_extent_fault():
     s = fresh(swap=SwapConfig(readahead_enabled=False))
     g = s.guest_alloc_ms()
     data = bytes(np.full(s.cfg.ms_bytes, 0x3A, np.uint8))
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     before = s.backend.stored_bytes()
     # fault one MP: the load peeks + caches the extent raw
-    assert s.read(s.ms_addr(g), s.cfg.mp_bytes) == data[:s.cfg.mp_bytes]
+    assert s.guest.read(g, s.cfg.mp_bytes) == data[:s.cfg.mp_bytes]
     assert s.backend.stored_bytes() == before
     s.close()
 
@@ -278,7 +278,7 @@ def test_racing_fault_cancels_batched_swap_out():
     s = fresh(swap=SwapConfig(batch_enabled=True, batch_mps=2))
     g = s.guest_alloc_ms()
     data = mixed_ms(s.cfg, 21)
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
 
     orig = s.backend.store_batch
     started = threading.Event()
@@ -300,7 +300,7 @@ def test_racing_fault_cancels_batched_swap_out():
     w.start()
     started.wait(5)
     time.sleep(0.003)                      # land mid-flight
-    got = s.read(s.ms_addr(g), s.cfg.ms_bytes)   # reader bumps the writer
+    got = s.guest.read(g, s.cfg.ms_bytes)   # reader bumps the writer
     assert got == data
     w.join(5)
     assert done.is_set()
@@ -311,7 +311,7 @@ def test_racing_fault_cancels_batched_swap_out():
     assert rec.present_count == s.cfg.mps_per_ms
     assert rec.state == MS_RESIDENT
     assert np.all(rec.bm_in == 0)
-    assert s.read(s.ms_addr(g), s.cfg.ms_bytes) == data
+    assert s.guest.read(g, s.cfg.ms_bytes) == data
     s.close()
 
 
@@ -319,14 +319,14 @@ def test_concurrent_faults_after_batched_swap_out_exactly_once():
     s = fresh()
     g = s.guest_alloc_ms()
     data = mixed_ms(s.cfg, 31)
-    s.write(s.ms_addr(g), data)
+    s.guest.write(g, data)
     s.engine.swap_out_ms(g, batched=True)
     errs = []
 
     def reader(mp):
         try:
             off = mp * s.cfg.mp_bytes
-            got = s.read(s.ms_addr(g) + off, s.cfg.mp_bytes)
+            got = s.guest.read(g, s.cfg.mp_bytes, off=off)
             assert got == data[off:off + s.cfg.mp_bytes]
         except Exception as e:             # pragma: no cover
             errs.append(e)

@@ -27,9 +27,9 @@ def test_root_access_rejects_non_identity():
 def test_guest_rw_roundtrip_and_access_bit():
     s = TaijiSystem(small_test_config())
     g = s.guest_alloc_ms()
-    addr = s.ms_addr(g, mp=2, off=10)
-    s.write(addr, b"taiji")
-    assert s.read(addr, 5) == b"taiji"
+    off = 2 * s.cfg.mp_bytes + 10
+    s.guest.write(g, b"taiji", off=off)
+    assert s.guest.read(g, 5, off=off) == b"taiji"
     assert s.virt.table.test_and_clear_accessed(g)
     assert not s.virt.table.test_and_clear_accessed(g)
 
@@ -37,26 +37,25 @@ def test_guest_rw_roundtrip_and_access_bit():
 def test_access_crossing_mp_boundary():
     s = TaijiSystem(small_test_config())
     g = s.guest_alloc_ms()
-    mp_bytes = s.cfg.mp_bytes
-    addr = s.ms_addr(g, mp=0, off=mp_bytes - 3)
-    s.write(addr, b"abcdef")           # spans MP0 -> MP1
-    assert s.read(addr, 6) == b"abcdef"
+    off = s.cfg.mp_bytes - 3
+    s.guest.write(g, b"abcdef", off=off)    # spans MP0 -> MP1
+    assert s.guest.read(g, 6, off=off) == b"abcdef"
 
 
 def test_fault_raised_without_handler():
     s = TaijiSystem(small_test_config())
     g = s.guest_alloc_ms()
-    s.write(s.ms_addr(g), b"x" * 16)
+    s.guest.write(g, b"x" * 16)
     s.engine.swap_out_ms(g)
     s.virt.fault_handler = None        # detach engine
     with pytest.raises(EPTFault):
-        s.virt.guest_read(s.ms_addr(g), 1)
+        s.virt.guest_read(s.guest.addr_of(g), 1)
 
 
 def test_fault_handler_resolves_transparently():
     s = TaijiSystem(small_test_config())
     g = s.guest_alloc_ms()
-    s.write(s.ms_addr(g), bytes(range(64)))
+    s.guest.write(g, bytes(range(64)))
     assert s.engine.swap_out_ms(g) == s.cfg.mps_per_ms
-    assert s.read(s.ms_addr(g), 64) == bytes(range(64))
+    assert s.guest.read(g, 64) == bytes(range(64))
     assert s.metrics.faults > 0
