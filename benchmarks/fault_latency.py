@@ -181,10 +181,30 @@ def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False,
             })
     finally:
         _gc.enable()
-    # Per-kind distributions merge across ALL windows: rare kinds (a
-    # compressed fault needs a cold non-zero MP that readahead did not
-    # already materialize) may land only a couple of samples per window,
-    # and a p90 from n=2 is sample starvation, not a latency figure.
+    # De-starve the compressed kind: a compressed fault needs a cold
+    # non-zero MP that readahead did not already materialize, and the
+    # smoke windows can land only a handful. Seed a dedicated batch --
+    # write a compressible non-zero pattern, swap that MP out through the
+    # scalar store (a standalone zlib blob, not an extent, so the fault
+    # records as plain FK_COMPRESSED), fault it back -- and merge ONLY
+    # its compressed-kind samples below. Runs after the measured windows
+    # so the headline distribution never sees the synthetic faults.
+    n_seed = 2 * MIN_KIND_SAMPLES
+    pat = bytes(range(1, 129)) * (cfg.mp_bytes // 128)
+    seed_gfns = gfns[:n_seed]
+    for g in seed_gfns:                 # writes may fault: all before reset
+        space.write(g, pat, off=0)
+    for g in seed_gfns:
+        system.engine.swap_out_mps(g, [0], batched=False)
+    system.metrics.sync()
+    system.metrics.reset_fault_latency()
+    for g in seed_gfns:
+        space.read(g, 64, off=0)
+    system.metrics.sync()
+    seeded_comp = system.metrics.fault_latency_by_kind["compressed"]
+    # Per-kind distributions merge across ALL windows: rare kinds may
+    # land only a couple of samples per window, and a p90 from n=2 is
+    # sample starvation, not a latency figure.
     # The headline p50/p90/p99 still comes from the median window alone
     # so one burst of machine noise cannot masquerade as a regression.
     merged_by_kind = {}
@@ -192,12 +212,15 @@ def run(n_faults: int = 3000, verbose: bool = True, smoke: bool = False,
         agg = LatencyHistogram()
         for win in windows:
             agg.merge(win["_kind_hists"][name])
+        if name == "compressed":
+            agg.merge(seeded_comp)
         merged_by_kind[name] = agg.snapshot()
     for win in windows:
         del win["_kind_hists"]
     windows.sort(key=lambda win: win["p90_us"])
     result = windows[len(windows) // 2]
     result["by_kind_merged"] = merged_by_kind
+    result["compressed_seeded"] = seeded_comp.count
     delta = result.pop("_delta")
     result.update({
         "zero_page_faults": delta["fault_zero_pages"],
@@ -370,9 +393,15 @@ def rows(smoke: bool = False) -> list:
         ("fault_under_10us_frac", r["frac_under_10us"],
          "paper=0.9357_cluster"),
         ("fault_zero_p90_us", zero["p90_us"], _n(zero)),
-        ("fault_compressed_p90_us", comp["p90_us"], _n(comp)),
+        ("fault_compressed_p90_us", comp["p90_us"],
+         f"{_n(comp)}_seeded={r['compressed_seeded']}"),
+        # p50 in derived differentiates this order statistic from the
+        # headline p99: both can select the same underlying sample on
+        # small windows (e.g. both reporting 221.517us is two quantiles
+        # of ~400 samples landing on one point, not object aliasing --
+        # pinned by tests/test_obs.py)
         ("fault_readahead_p90_us", ra["p90_us"],
-         f"{_n(ra)}_extents={r['readahead_extents']}"),
+         f"{_n(ra)}_p50={ra['p50_us']:.1f}us_extents={r['readahead_extents']}"),
         ("fault_readahead_mps", r["readahead_mps"],
          f"faults_avoided_per_extent"),
         ("fault_scalar_ref_p90_us", ref["p90_us"],

@@ -24,25 +24,70 @@ report):
 """
 from __future__ import annotations
 
-from repro.core.config import small_test_config
+from repro.core.config import ObsConfig, small_test_config
 from repro.fleet import (REJECT_OVERCOMMIT, capture_expert_churn,
                          capture_kv_serving, chaos_trace, paper_trace)
-from repro.fleet.harness import replay_twice
+from repro.fleet.harness import build_fleet, replay_twice
+from repro.obs import export_chrome, stage_tree
+
+# self-time attribution of the fleet fault path (fleet_swapin_stage_*
+# rows): (row suffix, stage name). The seven stages partition fault_total
+# exactly (fault_total's own self-time is the "other" bucket), so a naive
+# sum over the rows reproduces the fleet's mean fault latency.
+_FAULT_STAGES = (
+    ("mutex", "fault_mutex"),
+    ("desc", "fault_desc"),
+    ("copy", "fault_copy"),
+    ("backend", "fault_backend"),
+    ("readahead", "fault_readahead"),
+    ("decode", "readahead_decode"),
+    ("other", "fault_total"),
+)
 
 
-def run(smoke: bool = False, verbose: bool = True) -> dict:
+def run(smoke: bool = False, verbose: bool = True,
+        trace_out: str = None) -> dict:
     n_nodes = 4
-    cfg = small_test_config() if smoke else small_test_config(
-        ms_bytes=64 * 1024, mps_per_ms=16, n_phys_ms=32)
+    obs = ObsConfig(enabled=True)
+    cfg = small_test_config(obs=obs) if smoke else small_test_config(
+        ms_bytes=64 * 1024, mps_per_ms=16, n_phys_ms=32, obs=obs)
     gen = paper_trace(7, cfg.ms_bytes, cfg.mps_per_ms,
                       fill_ms=int(n_nodes * (cfg.n_phys_ms
                                              - cfg.mpool_reserve_ms) * 1.35),
                       burst=600 if smoke else 2000,
                       churn_frees=20)
 
-    eq = replay_twice(gen.lines(), n_nodes=n_nodes, domains=2, cfg=cfg)
+    # capture the fleets the harness builds: tracer aggregates are plain
+    # numpy arrays, so they survive the harness's fleet.close()
+    fleets = []
+
+    def make_fleet():
+        fleet = build_fleet(n_nodes, 2, cfg)
+        fleets.append(fleet)
+        return fleet
+
+    eq = replay_twice(gen.lines(), make_fleet=make_fleet)
     det = eq.runs[0].deterministic
     lat = eq.runs[0].result["latency"]
+
+    # stage attribution from the FIRST replay's tracers (the same run the
+    # latency snapshot above describes)
+    tracers = [tr for n in fleets[0].nodes
+               if (tr := n.system.metrics.tracer) is not None]
+    if fleets[0].tracer is not None:
+        tracers.append(fleets[0].tracer)
+    tree = stage_tree(tracers)
+    n_faults = max(1, int(lat["fault"]["count"]))
+    stage_us = {}
+    for suffix, stage in _FAULT_STAGES:
+        node = tree.get(stage)
+        stage_us[suffix] = (node["self_ns"] / 1e3 / n_faults
+                            if node is not None else 0.0)
+    fault_total_ns = (tree["fault_total"]["total_ns"]
+                      if "fault_total" in tree else 0)
+    trace_events = 0
+    if trace_out:
+        trace_events = export_chrome(trace_out, tracers)
 
     out = {
         "n_nodes": n_nodes,
@@ -60,6 +105,9 @@ def run(smoke: bool = False, verbose: bool = True) -> dict:
         "swap_in_p90_us": lat["fault"]["p90_us"],
         "swap_in_p99_us": lat["fault"]["p99_us"],
         "frac_under_10us": lat["frac_fault_under_10us"],
+        "stage_us": stage_us,
+        "fault_mean_us": fault_total_ns / 1e3 / n_faults,
+        "trace_events": trace_events,
     }
     if verbose:
         print(f"{n_nodes} nodes, {out['trace_ops']} trace ops: "
@@ -71,6 +119,11 @@ def run(smoke: bool = False, verbose: bool = True) -> dict:
               f"P90={out['swap_in_p90_us']:.1f}us "
               f"(paper target: P90 < 10us on DPU hardware)  "
               f"deterministic={bool(out['deterministic'])}")
+        budget = " ".join(f"{k}={v:.2f}us" for k, v in stage_us.items())
+        print(f"fault-path budget (self-time/fault, "
+              f"mean={out['fault_mean_us']:.2f}us): {budget}")
+        if trace_out:
+            print(f"wrote {trace_events} Chrome trace events to {trace_out}")
         if eq.divergence:
             print(f"DIVERGENCE: {eq.divergence}")
     return out
@@ -142,10 +195,16 @@ def run_capture(smoke: bool = False, verbose: bool = True) -> dict:
     return out
 
 
-def rows(smoke: bool = False) -> list:
-    r = run(smoke=smoke, verbose=False)
+def rows(smoke: bool = False, trace_out: str = None) -> list:
+    r = run(smoke=smoke, verbose=False, trace_out=trace_out)
     ch = run_chaos(smoke=smoke, verbose=False)
     cap = run_capture(smoke=smoke, verbose=False)
+    total_us = sum(r["stage_us"].values())
+    stage_rows = [
+        (f"fleet_swapin_stage_{suffix}_us", r["stage_us"][suffix],
+         f"share={r['stage_us'][suffix] / max(1e-12, total_us):.3f}_"
+         f"of_mean={r['fault_mean_us']:.2f}us")
+        for suffix, _ in _FAULT_STAGES]
     return [
         ("fleet_trace_ops", r["trace_ops"], f"nodes={r['n_nodes']}"),
         ("fleet_replay_deterministic", r["deterministic"],
@@ -159,6 +218,12 @@ def rows(smoke: bool = False) -> list:
          f"faults={r['faults']}"),
         ("fleet_swap_in_p90_us", r["swap_in_p90_us"],
          f"under10us={r['frac_under_10us']:.4f}"),
+        # stage-attributed fault-path budget (repro.obs): per-fault
+        # self-time of each stage; the seven rows partition the fleet's
+        # mean fault latency exactly, so their naive sum == the mean
+        *stage_rows,
+        ("fleet_fault_mean_us", r["fault_mean_us"],
+         f"stage_sum={total_us:.2f}us"),
         ("fleet_verify_failures", r["verify_failures"], "target=0"),
         ("fleet_chaos_deterministic", ch["deterministic"],
          f"kills={ch['kills']}_migrations={ch['migrations']}"),

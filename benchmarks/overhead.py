@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.reduce import reduced_config
-from repro.core.config import small_test_config
+from repro.core.config import ObsConfig, small_test_config
 from repro.core.system import TaijiSystem
 from repro.models import model as M
 
@@ -43,11 +43,25 @@ def run(verbose: bool = True) -> dict:
 
     t_native = _time_decode(step, params, tok, cache)
 
-    system = TaijiSystem(small_test_config())
-    system.start_background()          # manager live: BACK tasks running
-    t_elastic = _time_decode(step, params, tok, cache)
-    system.stop_background()
-    system.close()
+    # live-manager decode, untraced and with stage tracing on
+    # (repro.obs). Alternate the two configs and keep the min of each: a
+    # single 30-iter pair is hostage to background spikes on shared
+    # runners, and the tracer comparison (gated at 5%) needs both sides
+    # measured under the same machine weather
+    t_elastic = float("inf")
+    t_elastic_traced = float("inf")
+    for _ in range(5):
+        for traced in (False, True):
+            system = TaijiSystem(
+                small_test_config(obs=ObsConfig(enabled=traced)))
+            system.start_background()  # manager live: BACK tasks running
+            t = _time_decode(step, params, tok, cache, iters=10)
+            system.stop_background()
+            system.close()
+            if traced:
+                t_elastic_traced = min(t_elastic_traced, t)
+            else:
+                t_elastic = min(t_elastic, t)
 
     # (b) host access path: direct numpy vs block-table translation
     s = TaijiSystem(small_test_config())
@@ -75,21 +89,38 @@ def run(verbose: bool = True) -> dict:
     t_batched = (time.perf_counter() - t0) / (n_batches * 64)
     s.close()
 
+    # translated access with the span tracer recording (one guest_access
+    # span per read, flushed every ring_capacity pushes)
+    s = TaijiSystem(small_test_config(obs=ObsConfig(enabled=True)))
+    space = s.guest
+    g = space.alloc_ms()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        space.read(g, 64)
+    t_translated_traced = (time.perf_counter() - t0) / n
+    s.close()
+
     result = {
         "decode_native_ms": t_native * 1e3,
         "decode_elastic_ms": t_elastic * 1e3,
         "decode_overhead": t_elastic / t_native - 1.0,
+        "tracer_overhead": t_elastic_traced / max(t_elastic, 1e-12) - 1.0,
+        "decode_traced_ms": t_elastic_traced * 1e3,
         "host_direct_us": t_direct * 1e6,
         "host_translated_us": t_translated * 1e6,
+        "host_translated_traced_us": t_translated_traced * 1e6,
         "host_batched_us": t_batched * 1e6,
         "host_overhead_x": t_translated / max(t_direct, 1e-12),
     }
     if verbose:
         print(f"decode step: native {result['decode_native_ms']:.2f} ms, "
               f"with manager {result['decode_elastic_ms']:.2f} ms "
-              f"(overhead {result['decode_overhead']*100:+.1f}%; paper <5%)")
+              f"(overhead {result['decode_overhead']*100:+.1f}%; paper <5%), "
+              f"traced {result['decode_traced_ms']:.2f} ms "
+              f"(tracer {result['tracer_overhead']*100:+.1f}%)")
         print(f"host access: direct {result['host_direct_us']:.2f} us, "
-              f"translated {result['host_translated_us']:.2f} us, "
+              f"translated {result['host_translated_us']:.2f} us "
+              f"(traced {result['host_translated_traced_us']:.2f} us), "
               f"batched {result['host_batched_us']:.2f} us/access")
     return result
 
@@ -98,6 +129,10 @@ def rows() -> list:
     r = run(verbose=False)
     return [
         ("decode_overhead_frac", r["decode_overhead"], "paper<0.05"),
+        # span-tracer cost on the decode workload (manager live, tracing
+        # on vs off); the host number in derived is the traced scalar read
+        ("tracer_overhead_frac", r["tracer_overhead"],
+         f"host_traced={r['host_translated_traced_us']:.2f}us_target<0.05"),
         ("host_translated_access_us", r["host_translated_us"],
          f"direct={r['host_direct_us']:.2f}us"),
         ("host_batched_access_us", r["host_batched_us"],

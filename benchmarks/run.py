@@ -16,11 +16,16 @@ import time
 import traceback
 
 
-def _module_rows(mod, smoke: bool):
-    """Call ``mod.rows()``, passing ``smoke=`` only where supported."""
-    if smoke and "smoke" in inspect.signature(mod.rows).parameters:
-        return mod.rows(smoke=True)
-    return mod.rows()
+def _module_rows(mod, smoke: bool, trace_out=None):
+    """Call ``mod.rows()``, passing ``smoke=`` / ``trace_out=`` only
+    where supported."""
+    params = inspect.signature(mod.rows).parameters
+    kw = {}
+    if smoke and "smoke" in params:
+        kw["smoke"] = True
+    if trace_out and "trace_out" in params:
+        kw["trace_out"] = trace_out
+    return mod.rows(**kw)
 
 
 def main() -> None:
@@ -33,6 +38,10 @@ def main() -> None:
     ap.add_argument("--out", default=None,
                     help="JSON artifact path (default BENCH_smoke.json / "
                          "BENCH_full.json)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the fleet replay's stage spans as "
+                         "Chrome-trace-event JSON (open in Perfetto / "
+                         "chrome://tracing)")
     args = ap.parse_args()
 
     from . import (backend_ratio, code_size, fault_latency, fleet,
@@ -58,7 +67,8 @@ def main() -> None:
     for title, mod in modules:
         t0 = time.time()
         try:
-            for name, value, derived in _module_rows(mod, args.smoke):
+            for name, value, derived in _module_rows(mod, args.smoke,
+                                                     args.trace_out):
                 print(f"{name},{value:.6g},{derived}")
                 recorded[name] = {"value": float(value), "derived": str(derived)}
         except Exception:

@@ -48,15 +48,20 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs.tracer import (ST_KERNEL_LOAD, ST_KERNEL_STORE, ST_SWAP_COMPRESS,
+                          ST_SWAP_DECOMPRESS)
 from .config import TaijiConfig
 from .errors import CorruptionError
 from .metrics import Metrics
 from .ms import K_COMPRESSED, K_DISK, K_FREE, K_NONE, K_ZERO
+
+_perf_ns = time.perf_counter_ns
 
 
 class _Extent:
@@ -141,6 +146,9 @@ class BackendStore:
         self._pool = None
         self._pool_lock = threading.Lock()
         self._pool_workers = int(hp.compress_workers) if hp is not None else 0
+        # stage-attributed tracing (repro.obs): spans for the compress
+        # fan-out and the device kernel calls; None when disabled
+        self._tr = metrics.tracer
 
     def _compress_pool(self):
         """The lazy extent-compression pool, or ``None`` for the serial
@@ -495,9 +503,14 @@ class BackendStore:
         assert data.shape == (k, self.cfg.mp_bytes)
         kinds = np.full(k, K_NONE, dtype=np.uint8)
         crcs = np.zeros(k, dtype=np.uint32)
+        tr = self._tr
 
         if self._kernel_zero_detect is not None:
+            if tr is not None:
+                t_k = _perf_ns()
             zero = self._kernel_zero_detect(data)
+            if tr is not None:
+                tr.push(ST_KERNEL_STORE, t_k, _perf_ns() - t_k)
         else:
             zero = ~data.any(axis=1)
 
@@ -546,15 +559,26 @@ class BackendStore:
             raw_cats = [data[sub].tobytes() for sub in chunks]
             level = bk.compression_level
             pool = self._compress_pool() if len(chunks) > 1 else None
+            # one swap_compress span covers the whole fan-out's wall time
+            # on the issuing thread (per-worker spans would overlap and
+            # sum past the enclosing backend_store span)
+            if tr is not None:
+                t_z = _perf_ns()
             if pool is not None:
                 ext_blobs = list(pool.map(
                     lambda rc: zlib.compress(rc, level), raw_cats))
             else:
                 ext_blobs = [zlib.compress(rc, level) for rc in raw_cats]
+            if tr is not None:
+                tr.push(ST_SWAP_COMPRESS, t_z, _perf_ns() - t_z)
             row_tags = None
             if self._kernel_checksum is not None:
                 # one device kernel call tags every extent row in the batch
+                if tr is not None:
+                    t_k = _perf_ns()
                 row_tags = np.asarray(self._kernel_checksum(data))
+                if tr is not None:
+                    tr.push(ST_KERNEL_STORE, t_k, _perf_ns() - t_k)
             for sub, raw_cat, ext_blob in zip(chunks, raw_cats, ext_blobs):
                 if len(ext_blob) >= len(raw_cat):
                     leftovers.append(sub)     # incompressible: per-row path
@@ -577,6 +601,8 @@ class BackendStore:
                 stored_total += len(ext_blob)
             rest = (np.concatenate(leftovers) if leftovers
                     else rest[:0])
+        if tr is not None and len(rest):
+            t_z = _perf_ns()
         for i in rest:
             # per-row fallback: same tier order as the scalar store()
             raw = data[i].tobytes()
@@ -598,6 +624,8 @@ class BackendStore:
             mp = int(mps[i])
             pending.setdefault(self._shard_idx(gfn, mp), []).append(
                 ((gfn, mp), entry))
+        if tr is not None and len(rest):
+            tr.push(ST_SWAP_COMPRESS, t_z, _perf_ns() - t_z)
 
         # one lock acquisition per touched shard, not one per MP
         for shard, entries in pending.items():
@@ -664,6 +692,7 @@ class BackendStore:
         comp_rows = np.flatnonzero(kinds == K_COMPRESSED)
         by_shard: Dict[int, List[int]] = {}
         by_ext: Dict[int, List[Tuple[int, int]]] = {}
+        tr = self._tr
         if len(comp_rows):
             for i in comp_rows:
                 by_shard.setdefault(
@@ -674,6 +703,8 @@ class BackendStore:
                     for i in rows:
                         blobs[i] = self._compressed[(gfn, int(mps[i]))]
             n = self.cfg.mp_bytes
+            if tr is not None:
+                t_dz = _perf_ns()
             for i in comp_rows:
                 entry = blobs[int(i)]
                 tag = entry[0]
@@ -689,12 +720,23 @@ class BackendStore:
                 # the GIL); each payload installs idempotently under the
                 # extent lock, so racing a concurrent scalar fault is safe
                 self._ext_prefetch_raw(gfn, list(by_ext))
+            if tr is not None:
+                tr.push(ST_SWAP_DECOMPRESS, t_dz, _perf_ns() - t_dz)
             for eid, pairs in by_ext.items():
                 # one decompress + one scatter for all rows of this extent
+                if tr is not None:
+                    t_p = _perf_ns()
                 raw = self._ext_peek(gfn, eid)
+                if tr is not None:
+                    # near-zero when the prefetch above already cached raw
+                    tr.push(ST_SWAP_DECOMPRESS, t_p, _perf_ns() - t_p)
                 arr = np.frombuffer(raw, dtype=np.uint8).reshape(-1, n)
                 if self._kernel_checksum is not None:
+                    if tr is not None:
+                        t_k = _perf_ns()
                     self._ext_verify_tags(gfn, eid, arr)
+                    if tr is not None:
+                        tr.push(ST_KERNEL_LOAD, t_k, _perf_ns() - t_k)
                 out[[p[0] for p in pairs]] = arr[[p[1] for p in pairs]]
             self.metrics.fault_compressed_pages += len(comp_rows)
 

@@ -223,6 +223,23 @@ class BackendConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability: stage-attributed span tracing (``repro.obs``).
+
+    Off by default: with ``enabled=False`` no ``SpanTracer`` is
+    constructed and every instrumented call site costs exactly one
+    ``is not None`` branch (the GuestSpace empty-observer discipline).
+    Spans are wall-clock telemetry only -- they never enter
+    ``deterministic_snapshot``, so capture/replay and chaos determinism
+    are identical with tracing on or off.
+    """
+
+    enabled: bool = False
+    ring_capacity: int = 4096     # encoded spans buffered between flushes
+    max_spans: int = 200_000      # retained decoded spans (Chrome export)
+
+
+@dataclasses.dataclass(frozen=True)
 class TaijiConfig:
     """Top-level configuration of the elastic-memory system."""
 
@@ -240,6 +257,7 @@ class TaijiConfig:
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     backend: BackendConfig = dataclasses.field(default_factory=BackendConfig)
     swap: SwapConfig = dataclasses.field(default_factory=SwapConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     abi_version: int = ABI_VERSION
     # reserved fields for forward-compatible hot upgrades (paper §4.4)
@@ -274,6 +292,8 @@ class TaijiConfig:
             raise ValueError("scheduler shares must sum to <= 1.0")
         if self.backend.lock_shards < 1:
             raise ValueError("backend.lock_shards must be >= 1")
+        if self.obs.ring_capacity < 1 or self.obs.max_spans < 0:
+            raise ValueError("obs ring_capacity must be >= 1, max_spans >= 0")
 
 
 def small_test_config(**overrides) -> TaijiConfig:

@@ -38,12 +38,18 @@ Two access tiers (ISSUE 6):
 """
 from __future__ import annotations
 
+import time
 from contextlib import contextmanager
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.tracer import (ST_GUEST_ACCESS, TAG_GATHER, TAG_READ,
+                          TAG_READ_MANY, TAG_SCATTER, TAG_WRITE,
+                          TAG_WRITE_MANY)
 from .virt import F_ACCESSED, F_SPLIT, NO_PFN
+
+_perf_ns = time.perf_counter_ns
 
 # one observer event: (gfn, off, nbytes, is_write, data)
 AccessEvent = Tuple[int, int, int, bool, Optional[bytes]]
@@ -146,6 +152,10 @@ class GuestSpace:
         self._pfn = system.virt.table.pfn
         self._flags = system.virt.table.flags
         self._buf = system.phys.buffer
+        # stage-attributed tracing (repro.obs): one guest_access span per
+        # primitive call, tagged with the access kind; None when disabled,
+        # so the benchmarked scalar paths pay one truthiness check
+        self._tr = system.metrics.tracer
 
     # ------------------------------------------------------------ observers
     def attach(self, observer: GuestObserver) -> GuestObserver:
@@ -184,6 +194,9 @@ class GuestSpace:
             raise ValueError(
                 f"write [{off}, {off + nbytes}) exceeds MS "
                 f"({ms_bytes} bytes)")
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         # fast path: resident, unsplit MS -> direct buffer store
         if 0 <= gfn < self._n_virt:
             pfn = self._pfn[gfn]
@@ -195,6 +208,8 @@ class GuestSpace:
                 self._guest_write(gfn * ms_bytes + off, data)
         else:
             self._guest_write(gfn * ms_bytes + off, data)
+        if tr is not None:
+            tr.push(ST_GUEST_ACCESS, t0, _perf_ns() - t0, TAG_WRITE)
         if self._observers:
             data = bytes(data)
             for obs in self._observers:
@@ -211,6 +226,9 @@ class GuestSpace:
             raise ValueError(
                 f"read [{off}, {off + nbytes}) exceeds MS "
                 f"({ms_bytes} bytes)")
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         # fast path: resident, unsplit MS -> direct buffer slice
         if 0 <= gfn < self._n_virt:
             pfn = self._pfn[gfn]
@@ -222,6 +240,8 @@ class GuestSpace:
                 data = self._guest_read(gfn * ms_bytes + off, nbytes)
         else:
             data = self._guest_read(gfn * ms_bytes + off, nbytes)
+        if tr is not None:
+            tr.push(ST_GUEST_ACCESS, t0, _perf_ns() - t0, TAG_READ)
         if self._observers:
             for obs in self._observers:
                 obs.on_access(gfn, off, nbytes, False, data)
@@ -272,6 +292,9 @@ class GuestSpace:
         """
         if not len(reqs):
             return []
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         arr = np.asarray(reqs, dtype=np.int64).reshape(-1, 3)
         g, o, n = arr[:, 0], arr[:, 1], arr[:, 2]
         self._check_batch_bounds(o, n, "read_many")
@@ -290,6 +313,8 @@ class GuestSpace:
             else:
                 append(self._guest_read(int(g[i]) * ms_bytes + int(o[i]),
                                         nl[i]))
+        if tr is not None:
+            tr.push(ST_GUEST_ACCESS, t0, _perf_ns() - t0, TAG_READ_MANY)
         if self._observers:
             gl, ol = g.tolist(), o.tolist()
             events = [(gl[i], ol[i], nl[i], False, out[i])
@@ -303,6 +328,9 @@ class GuestSpace:
         :meth:`read_many`."""
         if not len(items):
             return
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         items = list(items)
         arr = np.asarray([(gfn, off, len(data)) for gfn, off, data in items],
                          dtype=np.int64)
@@ -319,6 +347,8 @@ class GuestSpace:
                 buf[b:b + nl[i]] = np.frombuffer(data, np.uint8)
             else:
                 self._guest_write(int(g[i]) * ms_bytes + int(o[i]), data)
+        if tr is not None:
+            tr.push(ST_GUEST_ACCESS, t0, _perf_ns() - t0, TAG_WRITE_MANY)
         if self._observers:
             gl, ol = g.tolist(), o.tolist()
             events = [(gl[i], ol[i], nl[i], True, bytes(data))
@@ -344,6 +374,9 @@ class GuestSpace:
         g = np.asarray(list(gfns), dtype=np.int64)
         if g.size == 0:
             return np.empty((0,) + shape, dtype)
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         fast = self._batch_probe(g)
         ms_bytes = self._ms_bytes
         raw = np.empty((g.size, nbytes), np.uint8)
@@ -357,6 +390,8 @@ class GuestSpace:
                 raw[i] = np.frombuffer(
                     self._guest_read(gl[i] * ms_bytes + off, nbytes),
                     np.uint8)
+        if tr is not None:
+            tr.push(ST_GUEST_ACCESS, t0, _perf_ns() - t0, TAG_GATHER)
         if self._observers:
             events = [(gl[i], off, nbytes, False, raw[i].tobytes())
                       for i in range(g.size)]
@@ -380,6 +415,9 @@ class GuestSpace:
                 f"scatter [{off}, {off + nbytes}) exceeds MS "
                 f"({self._ms_bytes} bytes)")
         rows = arr.reshape(g.size, -1).view(np.uint8).reshape(g.size, nbytes)
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         fast = self._batch_probe(g)
         ms_bytes = self._ms_bytes
         base = self._pfn[np.where(fast, g, 0)].astype(np.int64) * ms_bytes + off
@@ -391,6 +429,8 @@ class GuestSpace:
             else:
                 self._guest_write(gl[i] * ms_bytes + off,
                                   rows[i].tobytes())
+        if tr is not None:
+            tr.push(ST_GUEST_ACCESS, t0, _perf_ns() - t0, TAG_SCATTER)
         if self._observers:
             events = [(gl[i], off, nbytes, True, rows[i].tobytes())
                       for i in range(g.size)]

@@ -292,6 +292,12 @@ class Metrics:
         self.free_ms_timeline = Timeline()
         self.hot_cold_timeline = Timeline()
 
+        # stage-attributed span tracer (repro.obs) -- None unless
+        # ObsConfig.enabled; instrumented call sites cache this and guard
+        # with a single `is not None` branch. Wall-clock telemetry only:
+        # never part of deterministic_snapshot().
+        self.tracer = None
+
     @property
     def fault_latency(self) -> LatencyHistogram:
         """Fault-latency histogram, with pending ring samples folded in."""
@@ -322,6 +328,15 @@ class Metrics:
         self.fault_ring = LatencyRing(self._fault_latency,
                                       self._fault_latency_by_kind, self)
         self.fault_ring.count_crc = count_crc
+
+    def render_prom(self, tracer=None, prefix: str = "taiji") -> str:
+        """Prometheus text exposition of counters/gauges/histograms (and
+        per-stage span aggregates when tracing is enabled). Lazy import:
+        ``repro.obs.prom`` reads this object duck-typed, so core keeps no
+        hard dependency on the obs package."""
+        from repro.obs.prom import render_prom as _render
+        return _render(self, tracer if tracer is not None else self.tracer,
+                       prefix=prefix)
 
     def compression_ratio(self) -> float:
         """stored/raw over the compressed population (paper: 47.63%)."""

@@ -24,6 +24,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from ..obs.tracer import ST_SCHED_TASK
 from .config import TaijiConfig
 
 FRONT, FCPU, BACK, IDLE = range(4)
@@ -70,8 +71,11 @@ class RunQueue:
 
 
 class HvScheduler:
-    def __init__(self, cfg: TaijiConfig) -> None:
+    def __init__(self, cfg: TaijiConfig, tracer=None) -> None:
         self.cfg = cfg
+        # stage-attributed tracing (repro.obs): one sched_task span per
+        # task run, tagged with the priority class; None when disabled
+        self._tr = tracer
         sc = cfg.scheduler
         self.n_shards = sc.shards
         self.rqs = [RunQueue() for _ in range(self.n_shards)]
@@ -211,6 +215,9 @@ class HvScheduler:
             except Exception:
                 more = False
             dt = time.perf_counter() - t0
+            tr = self._tr
+            if tr is not None:
+                tr.push(ST_SCHED_TASK, int(t0 * 1e9), int(dt * 1e9), cls)
             t.runtime_s += dt
             t.runs += 1
             spent_total += dt

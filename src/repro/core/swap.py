@@ -31,6 +31,11 @@ from .backend import BackendStore
 from .config import TaijiConfig
 from .errors import CorruptionError, OutOfMemoryError, PinnedError
 from .lru import MultiLevelLRU
+from ..obs.tracer import (ST_BACKEND_LOAD, ST_BACKEND_STORE, ST_FAULT_BACKEND,
+                          ST_FAULT_COPY, ST_FAULT_DESC, ST_FAULT_MUTEX,
+                          ST_FAULT_READAHEAD, ST_FAULT_TOTAL,
+                          ST_READAHEAD_DECODE, ST_SWAP_GATHER, ST_SWAP_IN,
+                          ST_SWAP_OUT, ST_SWAP_SCATTER)
 from .metrics import (FK_COMPRESSED, FK_FAST, FK_OTHER, FK_READAHEAD,
                       FK_ZERO, Metrics)
 from .ms import (H_PFN, H_PRESENT, H_STATE, K_COMPRESSED, K_DISK, K_FREE,
@@ -69,6 +74,9 @@ class SwapEngine:
         self._crc_on = cfg.backend.crc_enabled
         self._fast = cfg.swap.fast_fault_enabled and reqs.table.enabled
         self._readahead = cfg.swap.readahead_enabled
+        # stage-attributed span tracer (repro.obs); None unless
+        # ObsConfig.enabled -- every traced site guards on `is not None`
+        self._tr = metrics.tracer
         if cfg.swap.use_pallas_kernels:
             # device data path for the batched MP copies: gather on
             # swap-out, scatter on swap-in (kernels/swap_copy.py,
@@ -114,6 +122,7 @@ class SwapEngine:
         """
         t0 = _perf_ns()
         m = self.metrics
+        tr = self._tr
         m.faults += 1
         if self._flags[gfn] & F_PINNED:   # lock-free read
             # fault on a registered DMA range: intercepted DMAR exception
@@ -132,8 +141,13 @@ class SwapEngine:
             done = 0
             pfn = -1
             lock = req.mp_mutex
+            if tr is not None:
+                t_lk = _perf_ns()
             lock.acquire()
             try:
+                if tr is not None:
+                    t_in = _perf_ns()
+                    tr.push(ST_FAULT_MUTEX, t_lk, t_in - t_lk)
                 ow = 0
                 # validity re-check under the mutex: hdr=-1 means
                 # teardown quiesced the GFN, and the row must still hold
@@ -167,6 +181,9 @@ class SwapEngine:
                                 req.record.on_first_swap_in(pfn)
                                 self.virt.table.map_split(gfn, pfn)
                                 self.lru.note_swapped_in(gfn)
+                if tr is not None:
+                    t_cp = _perf_ns()
+                    tr.push(ST_FAULT_DESC, t_in, t_cp - t_in)
                 if pfn >= 0:
                     o = pfn * self._ms_bytes + mp * self._mp_bytes
                     self._buf[o : o + self._mp_bytes] = 0
@@ -197,20 +214,32 @@ class SwapEngine:
                             m.ms_swapped_in += 1
                             req.mp_cond.notify_all()
                     done = 1
+                    if tr is not None:
+                        tr.push(ST_FAULT_COPY, t_cp, _perf_ns() - t_cp)
             finally:
                 lock.release()
             if done:
-                m.fault_ring.push(_perf_ns() - t0,
-                                  FK_ZERO | FK_FAST if done == 1 else FK_OTHER)
+                fk = FK_ZERO | FK_FAST if done == 1 else FK_OTHER
+                dur = _perf_ns() - t0
+                m.fault_ring.push(dur, fk)
+                if tr is not None:
+                    tr.push(ST_FAULT_TOTAL, t0, dur, fk)
                 return
 
         # slow path: locked scalar reference (cancels any active writer, 2.2)
+        if tr is not None:
+            t_rw = _perf_ns()
         req.rwlock.acquire_read()
         try:
+            if tr is not None:
+                tr.push(ST_FAULT_MUTEX, t_rw, _perf_ns() - t_rw)
             fk = self._fault_in_locked(req, gfn, mp)
         finally:
             req.rwlock.release_read()
-        m.fault_ring.push(_perf_ns() - t0, fk)
+        dur = _perf_ns() - t0
+        m.fault_ring.push(dur, fk)
+        if tr is not None:
+            tr.push(ST_FAULT_TOTAL, t0, dur, fk)
 
     def _fault_in_locked(self, req: Req, gfn: int, mp: int) -> int:
         """Locked scalar fault path. Returns the fault-kind code (FK_*)."""
@@ -220,11 +249,20 @@ class SwapEngine:
         # instead of going through per-bit helper calls
         w = mp >> 6
         bit = 1 << (mp & 63)
+        tr = self._tr
+        if tr is not None:
+            t_lk = _perf_ns()
         with req.mp_cond:
             # wait out any in-flight IO on this MP (exactly-once, Fig 8 3.3)
             while int(rec.bm_in[w]) & bit:
                 req.mp_cond.wait()
+            if tr is not None:
+                # mutex stage covers cond acquire + the IO-latch wait
+                t_d0 = _perf_ns()
+                tr.push(ST_FAULT_MUTEX, t_lk, t_d0 - t_lk)
             if not int(rec.bm_out[w]) & bit:
+                if tr is not None:
+                    tr.push(ST_FAULT_DESC, t_d0, _perf_ns() - t_d0)
                 return FK_OTHER             # another fault already resolved it
             first_in = rec.state == MS_SWAPPED
             if first_in:
@@ -243,6 +281,9 @@ class SwapEngine:
                 # zero-page fast path (76.79% of production swap-ins,
                 # Fig 15c): memset + constant-CRC check under the mutex --
                 # no IO-latch round trip, no backend call
+                if tr is not None:
+                    t_cp = _perf_ns()
+                    tr.push(ST_FAULT_DESC, t_d0, t_cp - t_d0)
                 self.virt.phys.mp_view(pfn, mp)[:] = 0
                 if self.cfg.backend.crc_enabled:
                     self.metrics.crc_checks += 1
@@ -260,6 +301,8 @@ class SwapEngine:
                     self.virt.table.merge(gfn, rec.pfn)       # (7)
                     self.metrics.ms_swapped_in += 1
                 req.mp_cond.notify_all()
+                if tr is not None:
+                    tr.push(ST_FAULT_COPY, t_cp, _perf_ns() - t_cp)
                 return FK_ZERO
 
             rec.bm_in[w] = _U64(int(rec.bm_in[w]) | bit)
@@ -271,16 +314,23 @@ class SwapEngine:
                 # sibling MP (bm_in latch, exactly-once) so one pass
                 # materializes them all and N future faults never happen
                 ra = self._claim_extent_readahead(rec, gfn, mp)
+            if tr is not None:
+                tr.push(ST_FAULT_DESC, t_d0, _perf_ns() - t_d0)
 
         if ra is not None:
             return self._readahead_fill(req, gfn, mp, crc, pfn, ra)
 
         # backend IO outside the mutex (readers of other MPs stay parallel)
+        if tr is not None:
+            t_b = _perf_ns()
         ok = False
         try:
             self.backend.load(gfn, mp, kind, crc, self.virt.phys.mp_view(pfn, mp))
             ok = True
         finally:
+            if tr is not None:
+                t_p = _perf_ns()
+                tr.push(ST_FAULT_BACKEND, t_b, t_p - t_b)
             with req.mp_cond:
                 rec.bm_in[w] = _U64(int(rec.bm_in[w]) & ~bit & _MASK64)
                 if ok:
@@ -293,6 +343,8 @@ class SwapEngine:
                         self.virt.table.merge(gfn, rec.pfn)   # (7)
                         self.metrics.ms_swapped_in += 1
                 req.mp_cond.notify_all()
+            if tr is not None:
+                tr.push(ST_FAULT_COPY, t_p, _perf_ns() - t_p)
         if kind == K_COMPRESSED:
             return FK_COMPRESSED
         return FK_ZERO if kind == K_FREE else FK_OTHER
@@ -355,12 +407,19 @@ class SwapEngine:
         n_extra = 0 if claim is None else len(claim)
         my_ok = False
         good: List[int] = []
+        tr = self._tr
+        if tr is not None:
+            t_ra = _perf_ns()
         try:
             # one decompress + ONE whole-extent CRC (per-row crc32 calls
             # cost more than the check is worth; the record CRCs remain
             # the scalar path's per-row guarantee)
+            if tr is not None:
+                t_dec = _perf_ns()
             raw, crc_ok = self.backend.extent_payload(
                 gfn, eid, verify=self._crc_on)
+            if tr is not None:
+                tr.push(ST_READAHEAD_DECODE, t_dec, _perf_ns() - t_dec)
             arr = _np.frombuffer(raw, dtype=_np.uint8)
             frame = self.virt.phys.ms_view(pfn)
             # (mp, row) pairs ascend together (extents store ascending MP
@@ -442,6 +501,10 @@ class SwapEngine:
         if not my_ok:
             raise CorruptionError(
                 f"CRC mismatch gfn={gfn} mp={mp} (extent {eid})")
+        if tr is not None:
+            # tag 1 = sibling MPs were actually materialized
+            tr.push(ST_FAULT_READAHEAD, t_ra, _perf_ns() - t_ra,
+                    1 if good else 0)
         return FK_READAHEAD if good else FK_COMPRESSED
 
     # ========================================================== Swap_out ==
@@ -568,6 +631,9 @@ class SwapEngine:
         cfg = self.cfg
         chunk = max(1, cfg.swap.batch_mps)
         done = 0
+        tr = self._tr
+        if tr is not None:
+            t_so = _perf_ns()
         # the write lock excludes faults and other writers, so the resident
         # set is fixed for the whole task: derive the MP index vector once
         # and walk it in cancellation-checked chunks (an explicit ``todo``
@@ -592,11 +658,18 @@ class SwapEngine:
 
             ms = self.virt.phys.ms_view(pfn_now).reshape(
                 cfg.mps_per_ms, cfg.mp_bytes)
+            if tr is not None:
+                t_g = _perf_ns()
             if self._kernel_gather is not None:
                 data = self._kernel_gather(ms, idxs)
             else:
                 data = ms[idxs]                   # fancy index: a copy (5)
+            if tr is not None:
+                t_st = _perf_ns()
+                tr.push(ST_SWAP_GATHER, t_g, t_st - t_g)
             kinds, crcs = self.backend.store_batch(gfn, idxs, data)
+            if tr is not None:
+                tr.push(ST_BACKEND_STORE, t_st, _perf_ns() - t_st)
 
             with req.mp_cond:
                 rec.kinds[idxs] = kinds
@@ -614,6 +687,8 @@ class SwapEngine:
                     self.lru.note_swapped_out(gfn)
                     self.metrics.ms_swapped_out += 1
                 req.mp_cond.notify_all()
+        if tr is not None:
+            tr.push(ST_SWAP_OUT, t_so, _perf_ns() - t_so)
         return done
 
     # =========================================================== Swap_in ==
@@ -664,6 +739,9 @@ class SwapEngine:
         cfg = self.cfg
         chunk = max(1, cfg.swap.batch_mps)
         done = 0
+        tr = self._tr
+        if tr is not None:
+            t_si = _perf_ns()
         # swapped-out set is fixed while we hold the write lock (faults
         # block; the IO latch below covers the store side): scan once
         with req.mp_cond:
@@ -698,10 +776,19 @@ class SwapEngine:
             try:
                 if len(idxs) == cfg.mps_per_ms:
                     # whole-MS chunk: decode straight into the MS frame
+                    if tr is not None:
+                        t_bl = _perf_ns()
                     self.backend.load_batch(gfn, idxs, kinds, crcs, ms)
+                    if tr is not None:
+                        tr.push(ST_BACKEND_LOAD, t_bl, _perf_ns() - t_bl)
                 else:
                     out = _np.empty((len(idxs), cfg.mp_bytes), dtype=_np.uint8)
+                    if tr is not None:
+                        t_bl = _perf_ns()
                     self.backend.load_batch(gfn, idxs, kinds, crcs, out)
+                    if tr is not None:
+                        t_sc = _perf_ns()
+                        tr.push(ST_BACKEND_LOAD, t_bl, t_sc - t_bl)
                     if self._kernel_scatter is not None:
                         # write back only the scattered rows: a racing
                         # guest write to a non-latched MP of this frame
@@ -710,6 +797,8 @@ class SwapEngine:
                         ms[idxs] = res[idxs]
                     else:
                         ms[idxs] = out
+                    if tr is not None:
+                        tr.push(ST_SWAP_SCATTER, t_sc, _perf_ns() - t_sc)
                 ok = True
             finally:
                 with req.mp_cond:
@@ -726,6 +815,8 @@ class SwapEngine:
                             self.virt.table.merge(gfn, rec.pfn)   # (7)
                             self.metrics.ms_swapped_in += 1
                     req.mp_cond.notify_all()
+        if tr is not None:
+            tr.push(ST_SWAP_IN, t_si, _perf_ns() - t_si)
         return done
 
     # ===================================================== reclaim rounds ==

@@ -56,6 +56,12 @@ class TaijiSystem:
         self.phys = phys or PhysicalMemory(cfg)
         self.mpool = Mpool(self.phys.mpool_arena(), cfg.mp_bytes)
         self.metrics = Metrics()
+        if cfg.obs.enabled:
+            # attach before any component constructs: backend/engine/guest
+            # cache ``metrics.tracer`` once at their own __init__
+            from repro.obs.tracer import SpanTracer
+            self.metrics.tracer = SpanTracer(cap=cfg.obs.ring_capacity,
+                                             max_spans=cfg.obs.max_spans)
         self.virt = VirtualizationLayer(cfg, self.phys, self.mpool)
         self.backend = BackendStore(cfg, self.metrics)
         self.reqs = ReqTree(cfg, self.mpool)
@@ -63,7 +69,7 @@ class TaijiSystem:
         self.watermark = WatermarkPolicy(cfg)
         self.engine = SwapEngine(cfg, self.virt, self.backend, self.reqs,
                                  self.lru, self.watermark, self.metrics)
-        self.scheduler = sched.HvScheduler(cfg)
+        self.scheduler = sched.HvScheduler(cfg, tracer=self.metrics.tracer)
         self.dma = DMARegistry(self.virt, self.engine, self.metrics)
 
         self._gfn_lock = threading.Lock()
@@ -72,6 +78,12 @@ class TaijiSystem:
         self._background_started = False
         self.module_version = 1          # bumped by hot upgrades
         self._guest: Optional[GuestSpace] = None
+
+    @property
+    def tracer(self):
+        """The system's :class:`repro.obs.tracer.SpanTracer`, or ``None``
+        when ``cfg.obs.enabled`` is False."""
+        return self.metrics.tracer
 
     @property
     def guest(self) -> GuestSpace:

@@ -20,13 +20,19 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
 
 from ..core.hotupgrade import EngineModule
 from ..core.metrics import LatencyHistogram
+from ..obs.tracer import (ST_FLEET_ADMISSION, ST_FLEET_PLACEMENT,
+                          ST_FLEET_RECOVERY, ST_FLEET_STEP, ST_FLEET_TICK,
+                          ST_FLEET_UPGRADE)
 from .node import NodeAgent
+
+_perf_ns = time.perf_counter_ns
 
 REJECT_OVERCOMMIT = "fleet_overcommit"
 REJECT_NO_CAPACITY = "no_serving_capacity"
@@ -151,6 +157,16 @@ class FleetController:
         self.upgrade_batches_done = 0
         self.upgrade_aborted = False
         self.upgrade_abort_reason = ""
+        # stage-attributed tracing (repro.obs): the controller gets its
+        # own tracer when the fleet is traced, on a pid track one past the
+        # node ids; None when any node runs untraced
+        self.tracer = None
+        if all(n.system.metrics.tracer is not None for n in self.nodes):
+            from ..obs.tracer import SpanTracer
+            obs = self.nodes[0].cfg.obs
+            self.tracer = SpanTracer(cap=obs.ring_capacity,
+                                     max_spans=obs.max_spans,
+                                     pid=len(self.nodes))
 
     # ---------------------------------------------------------- fleet sums
     # dead nodes are out of the fleet: their physical MSs back nothing and
@@ -179,17 +195,30 @@ class FleetController:
         least-pressured serving node with virtual headroom wins (node_id
         breaks ties deterministically).
         """
+        tr = self.tracer
+        if tr is not None:
+            t0 = _perf_ns()
         cap = int(self.fleet_managed_ms() * self.cfg.overcommit_cap)
         if self.fleet_committed_ms() + 1 > cap:
             self.rejections[REJECT_OVERCOMMIT] += 1
+            if tr is not None:
+                tr.push(ST_FLEET_ADMISSION, t0, _perf_ns() - t0, 1)
             return None, None, REJECT_OVERCOMMIT
+        if tr is not None:
+            t_p = _perf_ns()
         node = self._pick_target()
+        if tr is not None:
+            tr.push(ST_FLEET_PLACEMENT, t_p, _perf_ns() - t_p)
         if node is None:
             self.rejections[REJECT_NO_CAPACITY] += 1
+            if tr is not None:
+                tr.push(ST_FLEET_ADMISSION, t0, _perf_ns() - t0, 1)
             return None, None, REJECT_NO_CAPACITY
         gfn = node.alloc_ms()
         self.admitted += 1
         self.placements[node.node_id] += 1
+        if tr is not None:
+            tr.push(ST_FLEET_ADMISSION, t0, _perf_ns() - t0)
         return node, gfn, "ok"
 
     def _pick_target(self,
@@ -213,20 +242,35 @@ class FleetController:
         """One fleet round: detect dead nodes (failure recovery), step
         every surviving node, stagger reclaim windows, drive any in-flight
         rolling upgrade. Returns MPs reclaimed."""
+        tr = self.tracer
+        if tr is not None:
+            t0 = _perf_ns()
         for node in self.nodes:
             if not node.alive and node.allocated:
+                if tr is not None:
+                    t_r = _perf_ns()
                 self._replace_dead_ms(node)
+                if tr is not None:
+                    tr.push(ST_FLEET_RECOVERY, t_r, _perf_ns() - t_r)
         groups = self.cfg.reclaim_stagger_groups
         active_group = self.ticks % groups
         reclaimed = 0
+        if tr is not None:
+            t_s = _perf_ns()
         for i, node in enumerate(self.nodes):
             if not node.alive:
                 continue
             window = node.serving and self.reclaim_group_of(i) == active_group
             reclaimed += node.step(reclaim=window)
         self.reclaimed_mps += reclaimed
+        if tr is not None:
+            t_u = _perf_ns()
+            tr.push(ST_FLEET_STEP, t_s, t_u - t_s)
         self._drive_rolling()
         self.ticks += 1
+        if tr is not None:
+            tr.push(ST_FLEET_UPGRADE, t_u, _perf_ns() - t_u)
+            tr.push(ST_FLEET_TICK, t0, _perf_ns() - t0)
         return reclaimed
 
     # ---------------------------------------------------- failure injection

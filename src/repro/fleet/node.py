@@ -18,12 +18,17 @@ analogue) and exposes:
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Optional, Set, Type
 
 from ..core.config import TaijiConfig
 from ..core.errors import ABIMismatchError, InvalidStateError, TaijiError
 from ..core.hotupgrade import EngineModule, EntryOps, hot_upgrade, install_module
 from ..core.system import TaijiSystem
+from ..obs.tracer import (ST_NODE_CALL, TAG_READ, TAG_READ_MANY, TAG_WRITE,
+                          TAG_WRITE_MANY)
+
+_perf_ns = time.perf_counter_ns
 
 # pressure penalty per watermark zone: a node already reclaiming is a
 # worse placement target than raw occupancy alone suggests
@@ -73,6 +78,14 @@ class NodeAgent:
         self.space = self.system.guest
         self.entry = EntryOps()
         install_module(self.system, self.entry, EngineModule(self.system))
+        # stage-attributed tracing (repro.obs): the node's tracer tags its
+        # spans with the node id so a fleet Chrome trace shows one process
+        # track per node; None when disabled. Re-runs on recover() -- a
+        # rebooted node gets a fresh tracer like any other subsystem.
+        tr = self.system.metrics.tracer
+        if tr is not None:
+            tr.pid = self.node_id
+        self._tr = tr
 
     # -------------------------------------------------------------- serving
     @property
@@ -164,27 +177,49 @@ class NodeAgent:
 
     def write_at(self, gfn: int, off: int, data: bytes) -> None:
         """Byte-granular guest write (captured-trace payload replay)."""
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         self._check_serving()
         self.space.write(gfn, data, off=off)
+        if tr is not None:
+            tr.push(ST_NODE_CALL, t0, _perf_ns() - t0, TAG_WRITE)
 
     def read_at(self, gfn: int, off: int, nbytes: int) -> bytes:
         """Byte-granular guest read (captured-trace read-verify)."""
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         self._check_serving()
-        return self.space.read(gfn, nbytes, off=off)
+        data = self.space.read(gfn, nbytes, off=off)
+        if tr is not None:
+            tr.push(ST_NODE_CALL, t0, _perf_ns() - t0, TAG_READ)
+        return data
 
     def write_many(self, items) -> None:
         """Batched guest writes over (gfn, off, data) triples: one
         serving check + one GuestSpace batch call for the whole vector
         (the fleet wrapper's per-access share was a measurable slice of
         fleet swap-in p90 vs single-box)."""
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         self._check_serving()
         self.space.write_many(items)
+        if tr is not None:
+            tr.push(ST_NODE_CALL, t0, _perf_ns() - t0, TAG_WRITE_MANY)
 
     def read_many(self, reqs) -> list:
         """Batched guest reads over (gfn, off, nbytes) triples; see
         :meth:`write_many`."""
+        tr = self._tr
+        if tr is not None:
+            t0 = _perf_ns()
         self._check_serving()
-        return self.space.read_many(reqs)
+        out = self.space.read_many(reqs)
+        if tr is not None:
+            tr.push(ST_NODE_CALL, t0, _perf_ns() - t0, TAG_READ_MANY)
+        return out
 
     # --------------------------------------------------- migration (control)
     def export_ms(self, gfn: int):
