@@ -366,6 +366,62 @@ def extent_sweep(smoke: bool = False, verbose: bool = True) -> list:
     return out
 
 
+def slot_alloc_bench(verbose: bool = True, n: int = 20000) -> dict:
+    """Slot-allocator microbenchmark (ISSUE 8): allocation cost on the
+    sharded magazine allocator vs the legacy single-list path.
+
+    Only the *alloc* side rides the fault budget (first-in allocation
+    happens under the per-MS ``mp_mutex``; frees happen on the reclaim /
+    teardown paths), so the headline number times alloc-until-empty
+    phases only: the magazine path pays one shard lock per
+    ``magazine_size`` allocations and pops lock-free in between, the
+    legacy path pays the one global lock every time. The free side is
+    reported separately in the result dict. Best of 3.
+    """
+    import time as _time
+    from repro.core.config import HotPathConfig
+    from repro.core.virt import PhysicalMemory
+
+    out = {}
+    for name, hp in (("magazine", HotPathConfig()),
+                     ("legacy", HotPathConfig.legacy_scalar())):
+        cfg = small_test_config(n_phys_ms=128, mpool_reserve_ms=2,
+                                swap=SwapConfig(hot_path=hp))
+        phys = PhysicalMemory(cfg)
+        cap = phys.n_managed
+        phases = max(1, n // cap)
+        best_alloc = best_free = float("inf")
+        for _ in range(3):
+            alloc_ns = free_ns = 0
+            ops = 0
+            for _ in range(phases):
+                got = []
+                t0 = _time.perf_counter_ns()
+                while True:
+                    s = phys.try_alloc_slot()
+                    if s is None:
+                        break
+                    got.append(s)
+                alloc_ns += _time.perf_counter_ns() - t0
+                ops += len(got)
+                t0 = _time.perf_counter_ns()
+                for s in got:
+                    phys.free_slot(s)
+                free_ns += _time.perf_counter_ns() - t0
+            best_alloc = min(best_alloc, alloc_ns / ops / 1e3)
+            best_free = min(best_free, free_ns / ops / 1e3)
+        out[name + "_us"] = best_alloc
+        out[name + "_free_us"] = best_free
+    out["speedup"] = out["legacy_us"] / max(out["magazine_us"], 1e-12)
+    if verbose:
+        print(f"slot alloc: magazine {out['magazine_us']*1e3:.0f} ns/alloc "
+              f"(free {out['magazine_free_us']*1e3:.0f} ns), "
+              f"legacy {out['legacy_us']*1e3:.0f} ns/alloc "
+              f"(free {out['legacy_free_us']*1e3:.0f} ns) "
+              f"-> {out['speedup']:.2f}x")
+    return out
+
+
 def rows(smoke: bool = False) -> list:
     r = run(verbose=False, smoke=smoke)
     # A/B: the locked scalar reference path (no descriptor fast path, no
@@ -374,6 +430,7 @@ def rows(smoke: bool = False) -> list:
               fast_path=False, readahead=False)
     t = swap_throughput(smoke=smoke, verbose=False)
     sweep = extent_sweep(smoke=smoke, verbose=False)
+    sa = slot_alloc_bench(verbose=False, n=5000 if smoke else 20000)
     # per-kind rows come from the 3-window merged histograms (median-window
     # slices starve rare kinds down to n=2); rows under MIN_KIND_SAMPLES
     # are tagged UNSTABLE so nothing regress-tests against noise
@@ -407,6 +464,10 @@ def rows(smoke: bool = False) -> list:
         ("fault_scalar_ref_p90_us", ref["p90_us"],
          f"p50={ref['p50_us']:.1f}us_locked_path"),
         ("fault_p90_speedup", p90_speedup, "fast_vs_scalar_ref"),
+        # sharded-magazine allocator vs the legacy single-lock free list
+        # (us per alloc/free op, single-thread steady state)
+        ("slot_alloc_us", sa["magazine_us"],
+         f"legacy={sa['legacy_us']:.4f}us_speedup={sa['speedup']:.2f}x"),
         ("swap_out_batched_mps_per_s", t["batched_out_mps_per_s"],
          f"scalar={t['scalar_out_mps_per_s']:.0f}"),
         ("swap_in_batched_mps_per_s", t["batched_in_mps_per_s"],

@@ -31,12 +31,14 @@ from repro.fleet.harness import build_fleet, replay_twice
 from repro.obs import export_chrome, stage_tree
 
 # self-time attribution of the fleet fault path (fleet_swapin_stage_*
-# rows): (row suffix, stage name). The seven stages partition fault_total
-# exactly (fault_total's own self-time is the "other" bucket), so a naive
-# sum over the rows reproduces the fleet's mean fault latency.
+# rows): (row suffix, stage name). The eight stages partition fault_total
+# exactly (fault_total's own self-time is the "other" bucket; fault_alloc
+# is the first-in slot-allocation child carved out of fault_desc), so a
+# naive sum over the rows reproduces the fleet's mean fault latency.
 _FAULT_STAGES = (
     ("mutex", "fault_mutex"),
     ("desc", "fault_desc"),
+    ("alloc", "fault_alloc"),
     ("copy", "fault_copy"),
     ("backend", "fault_backend"),
     ("readahead", "fault_readahead"),

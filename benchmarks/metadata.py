@@ -12,19 +12,53 @@ from repro.core.system import TaijiSystem
 from .workload import fill_system
 
 
+def _age_and_reclaim(system, cfg) -> None:
+    for _ in range(4 * cfg.lru.stabilize_scans + 2):
+        for w in range(cfg.lru.workers):
+            system.lru.scan_shard(w, cfg.lru.workers)
+    while system.engine.reclaim_round() > 0:
+        pass
+
+
 def run(verbose: bool = True) -> dict:
     cfg = TaijiConfig(ms_bytes=128 * 1024, mps_per_ms=32, n_phys_ms=64,
                       overcommit_ratio=0.5, mpool_reserve_ms=4,
                       lru=LRUConfig(stabilize_scans=1, workers=1))
     system = TaijiSystem(cfg)
-    fill_system(system, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=17)
+    # The paper's 46.69% is *average used over peak used* across a load
+    # cycle (400 MB reserved, 127.33 MB average, "peak-relative") --
+    # metadata tracks the machine's swap population, and the average
+    # sits mid-cycle. The old row divided a single post-fill sample by
+    # the full reserve, which on this smoke geometry pinned it at ~0.03
+    # (a bare fill touches only the EPT full pages; no MS has ever
+    # swapped, so no req-tree descriptor exists). Drive a full lifecycle
+    # -- empty, fill, age + reclaim the elastic overhang through the
+    # real swap path (one descriptor per swapped MS), release half the
+    # guest set, refill -- sampling used bytes at each phase, and report
+    # the paper's metric over those samples.
+    samples = [system.mpool.stats()["used_bytes"]]          # empty system
+    data = fill_system(system, cfg.n_virt_ms - cfg.mpool_reserve_ms, seed=17)
+    samples.append(system.mpool.stats()["used_bytes"])      # filled, resident
+    _age_and_reclaim(system, cfg)
+    samples.append(system.mpool.stats()["used_bytes"])      # swapped (peak)
+    gfns = sorted(data)
+    for g in gfns[: len(gfns) // 2]:                        # load trough
+        system.guest_free_ms(g)
+    samples.append(system.mpool.stats()["used_bytes"])
+    for _ in range(len(gfns) // 4):                         # partial refill
+        system.guest_alloc_ms()
+    _age_and_reclaim(system, cfg)
+    samples.append(system.mpool.stats()["used_bytes"])
     st = system.mpool.stats()
     managed_bytes = (cfg.n_phys_ms - cfg.mpool_reserve_ms) * cfg.ms_bytes
+    avg_used = sum(samples) / len(samples)
     result = {
         "reserved_bytes": st["reserved_bytes"],
         "used_bytes": st["used_bytes"],
         "peak_bytes": st["peak_bytes"],
-        "utilization": st["utilization"],
+        "used_samples": samples,
+        "utilization": avg_used / max(1, st["peak_bytes"]),
+        "utilization_reserved": st["used_bytes"] / st["reserved_bytes"],
         "full_page_fraction": st["full_page_fraction"],
         "slab_fraction": st["slab_fraction"],
         "overhead_live": st["used_bytes"] / managed_bytes,
@@ -32,8 +66,10 @@ def run(verbose: bool = True) -> dict:
     }
     if verbose:
         print(f"mpool: {st['used_bytes']/1024:.1f} KiB used of "
-              f"{st['reserved_bytes']/1024:.1f} KiB reserved "
-              f"({st['utilization']*100:.1f}%; paper 46.69% peak-relative)")
+              f"{st['reserved_bytes']/1024:.1f} KiB reserved; "
+              f"avg/peak over lifecycle "
+              f"{result['utilization']*100:.1f}% "
+              f"(paper 46.69% peak-relative)")
         print(f"full pages {st['full_page_fraction']*100:.1f}% / slab "
               f"{st['slab_fraction']*100:.1f}% (paper 68.53% / 31.47%)")
         print(f"overhead: {result['overhead_live']*100:.2f}% live / "
@@ -46,7 +82,13 @@ def run(verbose: bool = True) -> dict:
 def rows() -> list:
     r = run(verbose=False)
     return [
-        ("mpool_utilization", r["utilization"], "paper~0.47"),
+        # avg-used/peak-used across an empty->fill->reclaim->release->
+        # refill lifecycle: the paper's own "46.69% peak-relative"
+        # metric (was used/reserved of one post-fill sample, which this
+        # smoke geometry pinned at a meaningless ~0.03)
+        ("mpool_utilization", r["utilization"],
+         f"paper~0.47_avg/peak_lifecycle_"
+         f"reserved_rel={r['utilization_reserved']:.4f}"),
         ("mpool_overhead_live", r["overhead_live"], "paper=0.0038"),
         ("mpool_full_page_fraction", r["full_page_fraction"], "paper=0.6853"),
     ]

@@ -130,8 +130,12 @@ def rows() -> list:
     return [
         ("decode_overhead_frac", r["decode_overhead"], "paper<0.05"),
         # span-tracer cost on the decode workload (manager live, tracing
-        # on vs off); the host number in derived is the traced scalar read
-        ("tracer_overhead_frac", r["tracer_overhead"],
+        # on vs off). The measured difference can come out negative on a
+        # noisy box (both sides are min-of-5 of a 10-iter mean); clamp
+        # the reported row at 0.0 so the CI gate compares against a
+        # monotone value, and keep the raw signed measurement in derived
+        ("tracer_overhead_frac", max(0.0, r["tracer_overhead"]),
+         f"raw={r['tracer_overhead']:+.5f}_"
          f"host_traced={r['host_translated_traced_us']:.2f}us_target<0.05"),
         ("host_translated_access_us", r["host_translated_us"],
          f"direct={r['host_direct_us']:.2f}us"),

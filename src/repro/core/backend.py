@@ -146,6 +146,22 @@ class BackendStore:
         self._pool = None
         self._pool_lock = threading.Lock()
         self._pool_workers = int(hp.compress_workers) if hp is not None else 0
+        # decoded-extent LRU (ISSUE 8): bounded cache of decompressed
+        # extent payloads keyed (gfn, eid), guarded by _ext_lock. With it
+        # enabled, extents keep their compressed payload and sibling-MP
+        # faults / readahead serve decoded bytes from here -- skipping
+        # zlib entirely on a hit -- while decoded retention stays bounded
+        # at `extent_cache_entries` buffers instead of one raw buffer per
+        # live extent. Inserts verify against the stored whole-extent CRC
+        # (a corrupt stream never enters the cache); entries die with
+        # their extent (drop / consume_extent_rows) or by LRU eviction.
+        # 0 keeps the legacy decompress-in-place behavior.
+        self._ext_cache_cap = (int(getattr(hp, "extent_cache_entries", 0) or 0)
+                               if hp is not None else 0)
+        from collections import OrderedDict as _OD
+        self._ext_cache: "Dict[Tuple[int, int], bytes]" = _OD()
+        self.ext_cache_hits = 0
+        self.ext_cache_misses = 0
         # stage-attributed tracing (repro.obs): spans for the compress
         # fan-out and the device kernel calls; None when disabled
         self._tr = metrics.tracer
@@ -337,6 +353,7 @@ class BackendStore:
                         ext.remaining -= 1
                         if ext.remaining == 0:
                             del self._extents[(gfn, entry[1])]
+                            self._ext_cache.pop((gfn, entry[1]), None)
                         m.backend_raw_bytes -= self.cfg.mp_bytes
                         m.backend_stored_bytes -= share
             else:                                 # "z" or "v" blob
@@ -347,20 +364,52 @@ class BackendStore:
                 self._disk_offsets.pop((gfn, mp), None)
 
     # ----------------------------------------------------------------- extents
-    @staticmethod
-    def _ext_raw(ext: _Extent) -> bytes:
-        """Decompress + cache an extent's raw payload exactly once so
-        sibling rows are slice-only. Callers hold ``_ext_lock``."""
-        if not ext.is_raw:
+    def _ext_cache_insert(self, key: Tuple[int, int], ext: _Extent,
+                          raw: bytes) -> None:
+        """Insert decoded bytes into the bounded LRU (caller holds
+        ``_ext_lock``). Verifies against the stored whole-extent CRC
+        first -- an unverifiable stream is served to the caller (whose
+        own salvage path handles corruption) but never cached."""
+        if self.cfg.backend.crc_enabled and not ext.verified:
+            if zlib.crc32(raw) != ext.crc:
+                return
+            ext.verified = True
+        cache = self._ext_cache
+        cache[key] = raw
+        while len(cache) > self._ext_cache_cap:
+            cache.popitem(last=False)
+
+    def _ext_raw(self, key: Tuple[int, int], ext: _Extent) -> bytes:
+        """Raw payload of one extent. Callers hold ``_ext_lock``.
+
+        Legacy mode (``extent_cache_entries == 0``): decompress + cache
+        in place on the extent exactly once, so sibling rows are
+        slice-only but the raw buffer lives as long as the extent. Cache
+        mode: decoded payloads live in the bounded LRU instead -- a hit
+        skips zlib entirely; after eviction the extent re-decompresses
+        from its (still-compressed) payload."""
+        if ext.is_raw:
+            return ext.payload
+        if self._ext_cache_cap <= 0:
             ext.payload = zlib.decompress(ext.payload)
             ext.is_raw = True
-        return ext.payload
+            return ext.payload
+        cache = self._ext_cache
+        raw = cache.get(key)
+        if raw is not None:
+            cache.move_to_end(key)
+            self.ext_cache_hits += 1
+            return raw
+        self.ext_cache_misses += 1
+        raw = zlib.decompress(ext.payload)
+        self._ext_cache_insert(key, ext, raw)
+        return raw
 
     def _ext_peek(self, gfn: int, eid: int) -> bytes:
         """Return the whole raw buffer of an extent without consuming any
-        rows (decompresses + caches raw on first touch)."""
+        rows (decompresses on first touch; cached raw thereafter)."""
         with self._ext_lock:
-            return self._ext_raw(self._extents[(gfn, eid)])
+            return self._ext_raw((gfn, eid), self._extents[(gfn, eid)])
 
     def _ext_prefetch_raw(self, gfn: int, eids: List[int]) -> None:
         """Decompress several extents' payloads concurrently through the
@@ -374,7 +423,9 @@ class BackendStore:
         with self._ext_lock:
             todo = [(eid, ext.payload) for eid in eids
                     if (ext := self._extents.get((gfn, eid))) is not None
-                    and not ext.is_raw]
+                    and not ext.is_raw
+                    and (self._ext_cache_cap <= 0
+                         or (gfn, eid) not in self._ext_cache)]
         if not todo:
             return
         if pool is not None and len(todo) > 1:
@@ -384,7 +435,12 @@ class BackendStore:
         with self._ext_lock:
             for (eid, _), raw in zip(todo, raws):
                 ext = self._extents.get((gfn, eid))
-                if ext is not None and not ext.is_raw:
+                if ext is None or ext.is_raw:
+                    continue
+                if self._ext_cache_cap > 0:
+                    if (gfn, eid) not in self._ext_cache:
+                        self._ext_cache_insert((gfn, eid), ext, raw)
+                else:
                     ext.payload = raw
                     ext.is_raw = True
 
@@ -415,6 +471,7 @@ class BackendStore:
             ext.remaining -= count
             if ext.remaining <= 0:
                 del self._extents[(gfn, eid)]
+                self._ext_cache.pop((gfn, eid), None)
 
     # ------------------------------------------------- extent readahead API
     def extent_members(self, gfn: int, mp: int):
@@ -457,7 +514,7 @@ class BackendStore:
         """
         with self._ext_lock:
             ext = self._extents[(gfn, eid)]
-            raw = self._ext_raw(ext)
+            raw = self._ext_raw((gfn, eid), ext)
             if not verify or ext.verified:
                 return raw, True
             want = ext.crc
@@ -787,6 +844,8 @@ class BackendStore:
         self._free_page_probe = probe
 
     def close(self) -> None:
+        with self._ext_lock:
+            self._ext_cache.clear()
         if self._pool is not None:
             self._pool.shutdown(wait=False)
             self._pool = None

@@ -109,20 +109,41 @@ class HotPathConfig:
       extents compress in parallel; results merge in submission order,
       making the stored bytes identical for ANY worker count (pinned by
       tests/test_hotpath_batch.py). ``<= 1`` keeps the serial path.
+    * ``slot_shards`` / ``magazine_size`` -- contention-free first-in
+      slot allocation (ISSUE 8): ``PhysicalMemory``'s free-slot list is
+      sharded into ``slot_shards`` per-shard freelists fronted by
+      per-thread *magazines* of up to ``magazine_size`` cached slots. A
+      faulting thread refills its magazine under ONE shard lock and then
+      serves first-in allocations lock-free; frees return to the slot's
+      home shard. ``magazine_size <= 0`` keeps the legacy single-list
+      path (one global lock), the A/B reference.
+    * ``extent_cache_entries`` -- bounded decoded-extent LRU in
+      ``BackendStore``: decompressed extent payloads are kept in an LRU
+      of this many entries (verified against the stored whole-extent CRC
+      on insert, invalidated when the extent is dropped/consumed) so
+      sibling-MP faults and readahead hitting a cached extent skip zlib
+      entirely while decoded retention stays bounded. ``0`` keeps the
+      legacy decompress-in-place behavior (unbounded per-live-extent raw
+      caching).
     """
 
     fast_fault: bool = True      # O(1)-descriptor zero-page fast path
     readahead: bool = True       # materialize whole extents on first fault
     pallas_kernels: bool = False # device kernels for the batched data path
     compress_workers: int = 4    # parallel extent (de)compression pool
+    slot_shards: int = 4         # per-shard free-slot freelists
+    magazine_size: int = 8       # per-thread slot magazine (0 = legacy list)
+    extent_cache_entries: int = 8  # decoded-extent LRU (0 = legacy in-place)
 
     @classmethod
     def legacy_scalar(cls) -> "HotPathConfig":
         """The pre-batching scalar reference profile: locked faults, no
-        readahead, host numpy/zlib, serial compression. The A/B baseline
-        benchmarks and semantic-equivalence tests measure against."""
+        readahead, host numpy/zlib, serial compression, single-list slot
+        allocation, in-place extent decode. The A/B baseline benchmarks
+        and semantic-equivalence tests measure against."""
         return cls(fast_fault=False, readahead=False,
-                   pallas_kernels=False, compress_workers=0)
+                   pallas_kernels=False, compress_workers=0,
+                   slot_shards=1, magazine_size=0, extent_cache_entries=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +213,14 @@ class SwapConfig:
                 readahead=bool(state.get("readahead_enabled", True)),
                 pallas_kernels=bool(state.get("use_pallas_kernels", False)))
         hp = state["hot_path"]
+        if not hasattr(hp, "slot_shards"):
+            # HotPathConfig pickled before the ISSUE-8 fields existed:
+            # rebuild so the allocator/cache knobs get their defaults
+            hp = HotPathConfig(
+                fast_fault=hp.fast_fault, readahead=hp.readahead,
+                pallas_kernels=hp.pallas_kernels,
+                compress_workers=hp.compress_workers)
+            state["hot_path"] = hp
         state["fast_fault_enabled"] = hp.fast_fault
         state["readahead_enabled"] = hp.readahead
         state["use_pallas_kernels"] = hp.pallas_kernels
@@ -292,6 +321,14 @@ class TaijiConfig:
             raise ValueError("scheduler shares must sum to <= 1.0")
         if self.backend.lock_shards < 1:
             raise ValueError("backend.lock_shards must be >= 1")
+        hp = self.swap.hot_path
+        if hp is not None:
+            if getattr(hp, "slot_shards", 1) < 1:
+                raise ValueError("hot_path.slot_shards must be >= 1")
+            if getattr(hp, "magazine_size", 0) < 0:
+                raise ValueError("hot_path.magazine_size must be >= 0")
+            if getattr(hp, "extent_cache_entries", 0) < 0:
+                raise ValueError("hot_path.extent_cache_entries must be >= 0")
         if self.obs.ring_capacity < 1 or self.obs.max_spans < 0:
             raise ValueError("obs ring_capacity must be >= 1, max_spans >= 0")
 

@@ -68,6 +68,23 @@ class MultiLevelLRU:
             self._sets[HOT][gfn] = 0
             self._level_of[gfn] = HOT
 
+    def note_swapped_in_batch(self, gfns: List[int]) -> None:
+        """Apply a batch of deferred fast-path swap-in notes (ISSUE 8).
+
+        One lock acquisition for the whole drained pending ring; entries
+        join HOT in drain order, so LRU ordering is eventually-exact but
+        the per-fault cost never lands on the fault budget.
+        """
+        with self._lock:
+            sets, level_of = self._sets, self._level_of
+            hot = sets[HOT]
+            for gfn in gfns:
+                old = level_of.pop(gfn, None)
+                if old is not None:
+                    sets[old].pop(gfn, None)
+                hot[gfn] = 0
+                level_of[gfn] = HOT
+
     # ---------------------------------------------------------------- scans
     def scan_shard(self, shard: int, n_shards: int) -> int:
         """One scan round over this shard's slice. Returns pages moved.

@@ -91,6 +91,19 @@ class HvScheduler:
         # multiplier per shard; grows while cycles do no real work so an
         # idle manager stops stealing GIL slices from foreground decode
         self._idle_mult = [1.0] * self.n_shards
+        # per-cycle hooks (ISSUE 8): cheap epoch-publish/drain callbacks
+        # run at the top of every shard-0 cycle (one publisher is enough;
+        # hooks must be fast and must not raise for long)
+        self._cycle_hooks: List[Callable[[], None]] = []
+
+    def add_cycle_hook(self, fn: Callable[[], None]) -> None:
+        """Register a callback run once per shard-0 scheduling cycle.
+
+        The swap engine uses this to epoch-publish the watermark zone and
+        drain deferred fast-path LRU joins on the background cadence --
+        the staleness bound of the published view is one cycle
+        (``SchedulerConfig.cycle_ms``, stretched by idle backoff)."""
+        self._cycle_hooks.append(fn)
 
     # ------------------------------------------------------------- task API
     def add_task(self, shard: int, name: str, cls: int,
@@ -145,6 +158,12 @@ class HvScheduler:
 
     # one scheduling cycle for one shard
     def _run_cycle(self, shard: int) -> None:
+        if shard == 0:
+            for hook in self._cycle_hooks:
+                try:
+                    hook()
+                except Exception:
+                    pass  # hooks are advisory; same policy as task errors
         cycle_s = self.cfg.scheduler.cycle_ms / 1e3
         rq = self.rqs[shard]
         start = time.perf_counter()

@@ -31,9 +31,9 @@ from .backend import BackendStore
 from .config import TaijiConfig
 from .errors import CorruptionError, OutOfMemoryError, PinnedError
 from .lru import MultiLevelLRU
-from ..obs.tracer import (ST_BACKEND_LOAD, ST_BACKEND_STORE, ST_FAULT_BACKEND,
-                          ST_FAULT_COPY, ST_FAULT_DESC, ST_FAULT_MUTEX,
-                          ST_FAULT_READAHEAD, ST_FAULT_TOTAL,
+from ..obs.tracer import (ST_BACKEND_LOAD, ST_BACKEND_STORE, ST_FAULT_ALLOC,
+                          ST_FAULT_BACKEND, ST_FAULT_COPY, ST_FAULT_DESC,
+                          ST_FAULT_MUTEX, ST_FAULT_READAHEAD, ST_FAULT_TOTAL,
                           ST_READAHEAD_DECODE, ST_SWAP_GATHER, ST_SWAP_IN,
                           ST_SWAP_OUT, ST_SWAP_SCATTER)
 from .metrics import (FK_COMPRESSED, FK_FAST, FK_OTHER, FK_READAHEAD,
@@ -65,6 +65,16 @@ class SwapEngine:
         # the O(1) descriptor table, the flat physical buffer, geometry
         # constants and the constant zero-page CRC
         self._ft = reqs.table
+        # descriptor-table views hoisted one level further (ISSUE 8): the
+        # arrays are built once, so the fast path loads them off self
+        # instead of chasing reqs.table each fault
+        self._u64 = reqs.table.u64
+        self._i64 = reqs.table.i64
+        self._a8 = reqs.table.a8
+        self._u32 = reqs.table.u32
+        self._hdr = reqs.table.hdr
+        self._reqrows = reqs.table.reqs
+        self._phys = virt.phys
         self._buf = virt.phys.buffer
         self._flags = virt.table.flags   # stable array, built once
         self._ms_bytes = cfg.ms_bytes
@@ -74,6 +84,15 @@ class SwapEngine:
         self._crc_on = cfg.backend.crc_enabled
         self._fast = cfg.swap.fast_fault_enabled and reqs.table.enabled
         self._readahead = cfg.swap.readahead_enabled
+        # contention-free admission state (ISSUE 8): the fast path reads
+        # the epoch-published watermark flag instead of recomputing
+        # is_critical(free_ms) under the mp_mutex, and defers LRU joins
+        # into a lock-free pending ring (plain list; append/pop are
+        # GIL-atomic) drained off the fault budget
+        self._wm = watermark
+        self._lru_pending: List[int] = []
+        watermark.publish(virt.free_ms)  # first epoch: faults before the
+        # first background round see the true initial zone
         # stage-attributed span tracer (repro.obs); None unless
         # ObsConfig.enabled -- every traced site guards on `is not None`
         self._tr = metrics.tracer
@@ -127,17 +146,16 @@ class SwapEngine:
         if self._flags[gfn] & F_PINNED:   # lock-free read
             # fault on a registered DMA range: intercepted DMAR exception
             m.dmar_intercepts += 1
-        req = self._ft.reqs[gfn]
+        req = self._reqrows[gfn]
         if req is None:
             raise OutOfMemoryError(f"fault on unmanaged swapped gfn {gfn}")
 
         if self._fast:
-            ft = self._ft
             hdr, bmo, bmi, kio, cro = req.fdesc
             w = mp >> 6
             bit = 1 << (mp & 63)
-            u64 = ft.u64
-            i64 = ft.i64
+            u64 = self._u64
+            i64 = self._i64
             done = 0
             pfn = -1
             lock = req.mp_mutex
@@ -154,46 +172,58 @@ class SwapEngine:
                 # OUR req -- a free+realloc can re-arm the gate for a new
                 # req (even at the same slab base) while we hold the old
                 # one's mutex (ABA)
-                if ft.reqs[gfn] is req and ft.hdr[gfn] >= 0:
+                if self._reqrows[gfn] is req and self._hdr[gfn] >= 0:
                     ow = int(u64[bmo + w])
                     if not ow & bit:
                         done = 2            # another fault already resolved it
-                    elif (ft.a8[kio + mp] == K_ZERO
+                    elif (self._a8[kio + mp] == K_ZERO
                           and not int(u64[bmi + w]) & bit):
                         # pfn >= 0 here means MS_PARTIAL: with bm_out set
                         # the state cannot be RESIDENT, and SWAPPED
                         # implies pfn=-1
                         pfn = int(i64[hdr + H_PFN])
                         if pfn < 0 and i64[hdr + H_STATE] == MS_SWAPPED \
-                                and not self.watermark.is_critical(
-                                    self.virt.free_ms):
+                                and not self._wm.published_critical:
                             # exactly-once first-in alloc (Fig 8 state).
-                            # Only the leaf-locked slot pop is allowed
-                            # here: the critical/exhausted case must
-                            # reclaim through the slow path, whose rwlock
-                            # read grant is what lets a concurrent
+                            # Only the magazine/leaf-locked slot pop is
+                            # allowed here: the critical/exhausted case
+                            # must reclaim through the slow path, whose
+                            # rwlock read grant is what lets a concurrent
                             # reclaimer's non-blocking write acquisition
                             # skip this MS (holding mp_mutex while waiting
-                            # on another req's mutex could cycle)
-                            slot = self.virt.phys.try_alloc_slot()
+                            # on another req's mutex could cycle). The
+                            # published critical flag is stale by at most
+                            # one publish cadence, and only in the safe
+                            # direction: a stale `critical` sends us to
+                            # the slow path, which re-verifies against
+                            # the live free count
+                            if tr is not None:
+                                t_al = _perf_ns()
+                            slot = self._phys.try_alloc_slot()
                             if slot is not None:
                                 pfn = slot
                                 req.record.on_first_swap_in(pfn)
                                 self.virt.table.map_split(gfn, pfn)
-                                self.lru.note_swapped_in(gfn)
+                                # LRU join deferred off the fault budget:
+                                # drained by step_background / slow-path
+                                # entry / reclaim (eventually-exact order)
+                                self._lru_pending.append(gfn)
+                            if tr is not None:
+                                tr.push(ST_FAULT_ALLOC, t_al,
+                                        _perf_ns() - t_al)
                 if tr is not None:
                     t_cp = _perf_ns()
                     tr.push(ST_FAULT_DESC, t_in, t_cp - t_in)
                 if pfn >= 0:
                     o = pfn * self._ms_bytes + mp * self._mp_bytes
                     self._buf[o : o + self._mp_bytes] = 0
-                    if self._crc_on and ft.u32[cro + mp] != self._zero_crc:
+                    if self._crc_on and self._u32[cro + mp] != self._zero_crc:
                         m.crc_checks += 1
                         m.crc_failures += 1
                         raise CorruptionError(
                             f"zero-page CRC mismatch gfn={gfn} mp={mp}")
                     u64[bmo + w] = ow & ~bit & _MASK64
-                    ft.a8[kio + mp] = K_NONE
+                    self._a8[kio + mp] = K_NONE
                     pc = int(i64[hdr + H_PRESENT]) + 1
                     i64[hdr + H_PRESENT] = pc
                     # fault_zero_pages / fault_fast_path / crc_checks are
@@ -227,6 +257,10 @@ class SwapEngine:
                 return
 
         # slow path: locked scalar reference (cancels any active writer, 2.2)
+        if self._lru_pending:
+            # drain deferred fast-path LRU joins at slow-path entry so any
+            # reclaim decision made below sees current ordering
+            self.drain_lru_pending()
         if tr is not None:
             t_rw = _perf_ns()
         req.rwlock.acquire_read()
@@ -266,12 +300,18 @@ class SwapEngine:
                 return FK_OTHER             # another fault already resolved it
             first_in = rec.state == MS_SWAPPED
             if first_in:
+                if tr is not None:
+                    t_al = _perf_ns()
                 pfn = self._alloc_slot_critical()
                 rec.on_first_swap_in(pfn)   # exactly-once alloc (Fig 8 state)
                 self.virt.table.map_split(gfn, pfn)
                 # the MS holds a physical slot again: it joins the hot set
                 # now (Fig 14d) so partially-resident MSs stay reclaimable
                 self.lru.note_swapped_in(gfn)
+                if tr is not None:
+                    # attribute slot allocation (and any synchronous
+                    # critical reclaim inside it) to its own child stage
+                    tr.push(ST_FAULT_ALLOC, t_al, _perf_ns() - t_al)
             else:
                 pfn = rec.pfn
             kind = int(rec.kinds[mp])
@@ -830,7 +870,11 @@ class SwapEngine:
         task; the round stops starting new MS batches once it is spent,
         so batch sizing composes with the scheduler's time slicing.
         """
-        free = self.virt.free_ms
+        # drain deferred fast-path LRU joins first so pick_cold sees every
+        # resident MS, then epoch-publish the zone the fast path reads
+        if self._lru_pending:
+            self.drain_lru_pending()
+        free = self._wm.publish(self.virt.free_ms)
         self.metrics.free_ms_timeline.record(free)
         if not self.watermark.should_start_reclaim(free):
             return 0
@@ -856,13 +900,21 @@ class SwapEngine:
             except PinnedError:
                 continue
         self.metrics.reclaim_rounds += 1
+        self._wm.publish(self.virt.free_ms)  # round raised free: re-publish
         return reclaimed
 
     def _alloc_slot_critical(self) -> int:
         """Allocate a physical MS; below the min watermark (or on
-        exhaustion), proactively swap out cold MSs synchronously."""
+        exhaustion), proactively swap out cold MSs synchronously.
+
+        This is the slow path that re-verifies the epoch-published
+        critical flag against the LIVE free count (exact, conservative
+        direction of ISSUE 8) -- and re-publishes, so a stale flag heals
+        on the first slow-path visit.
+        """
         slot = self.virt.phys.try_alloc_slot()
-        if slot is not None and not self.watermark.is_critical(self.virt.free_ms):
+        if slot is not None and not self.watermark.is_critical(
+                self._wm.publish(self.virt.free_ms)):
             return slot
         if slot is not None:
             # critical but not exhausted: kick a synchronous reclaim too,
@@ -880,6 +932,12 @@ class SwapEngine:
         deadline = time.monotonic() + 5.0
         while time.monotonic() < deadline:
             self.metrics.proactive_reclaims += 1
+            # a resident MS whose fast-path LRU join is still pending is
+            # invisible to the pickers: drain first so exhaustion never
+            # misses reclaimable memory (try_alloc_slot already stole any
+            # magazine-cached slots before reporting None)
+            if self._lru_pending:
+                self.drain_lru_pending()
             cands = self.lru.pick_cold(4, include_cold_int=True)
             if not cands:
                 cands = self.lru.pick_coldest_any(4)
@@ -894,6 +952,45 @@ class SwapEngine:
             if not cands:
                 time.sleep(0.001)
         raise OutOfMemoryError("no physical MS and no cold pages to reclaim")
+
+    # ----------------------------------------------- deferred-work drains --
+    def drain_lru_pending(self) -> None:
+        """Apply deferred fast-path ``note_swapped_in`` joins (ISSUE 8).
+
+        The fast path appends GFNs to a plain list (GIL-atomic); the
+        drain pops from the SAME list object, so a racing append is never
+        lost and each note is applied exactly once. Drained at
+        ``step_background``, slow-path fault entry, reclaim-round start
+        and exhaustion -- LRU ordering is eventually-exact, never paid on
+        the fault budget.
+        """
+        pend = self._lru_pending
+        batch: List[int] = []
+        while True:
+            try:
+                batch.append(pend.pop())
+            except IndexError:
+                break
+        if batch:
+            self.lru.note_swapped_in_batch(batch)
+
+    def publish_epoch(self) -> None:
+        """Background-cadence refresh: drain deferred LRU joins and
+        epoch-publish the watermark view the fault fast path reads.
+        Registered as an hv_sched cycle hook and called from
+        ``step_background``."""
+        if self._lru_pending:
+            self.drain_lru_pending()
+        self._wm.publish(self.virt.free_ms)
+
+    def drain_deferred(self) -> int:
+        """Full drain hook for reclaim/teardown (ISSUE 8): apply pending
+        LRU joins AND return every magazine-cached slot to its home
+        shard, then re-publish. Returns the number of slots drained."""
+        self.drain_lru_pending()
+        drained = self.virt.phys.drain_magazines()
+        self._wm.publish(self.virt.free_ms)
+        return drained
 
     # ------------------------------------------------------------ utilities
     def resident_cold_fraction(self) -> float:

@@ -70,6 +70,10 @@ class TaijiSystem:
         self.engine = SwapEngine(cfg, self.virt, self.backend, self.reqs,
                                  self.lru, self.watermark, self.metrics)
         self.scheduler = sched.HvScheduler(cfg, tracer=self.metrics.tracer)
+        # epoch publishing (ISSUE 8): every scheduler cycle refreshes the
+        # watermark view the fault fast path reads and drains deferred
+        # LRU joins; stepped mode gets the same refresh in step_background
+        self.scheduler.add_cycle_hook(self.engine.publish_epoch)
         self.dma = DMARegistry(self.virt, self.engine, self.metrics)
 
         self._gfn_lock = threading.Lock()
@@ -110,7 +114,10 @@ class TaijiSystem:
     def guest_free_ms(self, gfn: int) -> None:
         # ordering matters vs. the background reclaimer: leave the LRU
         # first (no new reclaim picks), then take the req's write lock to
-        # wait out any in-flight swap task before tearing the MS down
+        # wait out any in-flight swap task before tearing the MS down.
+        # Drain the deferred fast-path LRU ring before untracking, else a
+        # later drain would re-track this gfn after it is freed
+        self.engine.drain_lru_pending()
         self.lru.untrack(gfn)
         req = self.reqs.lookup(gfn)
         grant = req.rwlock.acquire_write() if req is not None else None
@@ -135,6 +142,12 @@ class TaijiSystem:
                 req.rwlock.release_write(grant)
         if req is not None:
             self.reqs.remove(gfn)
+        # a fast fault that raced the teardown may have enqueued this gfn
+        # between the drain above and the quiesce; after quiesce no new
+        # notes are possible, so one more drain+untrack leaves nothing
+        # stale in the LRU
+        self.engine.drain_lru_pending()
+        self.lru.untrack(gfn)
         with self._gfn_lock:
             self._free_gfns.append(gfn)
 
@@ -275,6 +288,7 @@ class TaijiSystem:
         if self._background_started:
             raise InvalidStateError(
                 "step_background conflicts with running hv_sched threads")
+        self.engine.publish_epoch()     # drain deferred joins + re-publish
         nw = self.cfg.lru.workers
         for w in range(nw):
             self.lru.scan_shard(w, nw)
@@ -291,6 +305,7 @@ class TaijiSystem:
         timing-dependent percentiles separately.
         """
         self.metrics.sync()              # fold pending latency-ring samples
+        self.engine.drain_lru_pending()  # LRU counts reflect drained state
         free = self.phys.free_count
         return {
             "deterministic": {
@@ -318,8 +333,13 @@ class TaijiSystem:
             "metrics": self.metrics.snapshot(),
             "n_reqs": len(self.reqs),
             "backend_stored_bytes": self.backend.stored_bytes(),
+            "slot_alloc": self.phys.alloc_stats(),
         }
 
     def close(self) -> None:
         self.stop_background()
+        # teardown drain hook (ISSUE 8): magazine-cached slots return to
+        # their shards and deferred LRU joins apply, so anything reading
+        # the carcass (chaos accounting, tests) sees exact state
+        self.engine.drain_deferred()
         self.backend.close()

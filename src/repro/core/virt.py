@@ -51,36 +51,163 @@ class EPTFault(Exception):
 
 
 class PhysicalMemory:
-    """The device's physical memory: ``n_phys_ms`` sections of ``ms_bytes``."""
+    """The device's physical memory: ``n_phys_ms`` sections of ``ms_bytes``.
+
+    Slot allocation (ISSUE 8): the free-slot list is sharded into
+    ``hot_path.slot_shards`` per-shard freelists (a slot's home shard is
+    ``pfn % n_shards``) fronted by per-thread *magazines*. A faulting
+    thread refills its magazine with up to ``magazine_size`` slots under
+    ONE shard lock, then serves allocations from the magazine lock-free
+    (``list.pop`` is atomic under the GIL, so each cached slot is handed
+    out exactly once even while :meth:`drain_magazines` or an exhausted
+    peer steals from the same magazine). Frees return to the slot's home
+    shard under that shard's lock only.
+
+    Accounting: ``free_count`` is the sum of shard and magazine lengths.
+    Magazine-cached slots have not been handed to any caller, so they
+    count as free; the sum is exact at quiescence (tests, snapshots,
+    watermark publishes) and skews by at most one in-flight refill batch
+    for a few bytecodes mid-refill -- in the conservative (undercount)
+    direction.
+
+    ``magazine_size <= 0`` collapses to the legacy single-list path
+    (one global lock, identical pop order to the pre-ISSUE-8 code): the
+    A/B reference used by ``HotPathConfig.legacy_scalar``.
+    """
 
     def __init__(self, cfg: TaijiConfig) -> None:
         cfg.validate()
         self.cfg = cfg
         self.buffer = np.zeros(cfg.n_phys_ms * cfg.ms_bytes, dtype=np.uint8)
-        self._lock = threading.Lock()
         # slots below mpool_reserve_ms are the pinned metadata arena
-        self._free_slots: List[int] = list(
+        slots: List[int] = list(
             range(cfg.n_phys_ms - 1, cfg.mpool_reserve_ms - 1, -1))
         self.n_managed = cfg.n_phys_ms - cfg.mpool_reserve_ms
 
+        hp = getattr(cfg.swap, "hot_path", None)
+        self._mag_size = int(getattr(hp, "magazine_size", 0) or 0)
+        n_shards = int(getattr(hp, "slot_shards", 1) or 1)
+        if self._mag_size <= 0:
+            n_shards = 1  # legacy single-list path
+        self._n_shards = max(1, min(n_shards, max(1, len(slots))))
+        self._shard_locks = [threading.Lock() for _ in range(self._n_shards)]
+        if self._n_shards == 1:
+            self._shards: List[List[int]] = [slots]
+        else:
+            self._shards = [[] for _ in range(self._n_shards)]
+            for pfn in slots:
+                self._shards[pfn % self._n_shards].append(pfn)
+        # legacy aliases: single-list mode pops/appends through these
+        self._lock = self._shard_locks[0]
+        self._free_slots = self._shards[0]
+        # pre-zipped (lock, shard) pairs: the free path indexes once
+        self._homes = list(zip(self._shard_locks, self._shards))
+        # per-thread magazines; the registry lets drain/steal walk every
+        # magazine regardless of owning thread
+        self._tls = threading.local()
+        self._magazines: List[List[int]] = []
+        self._mag_registry_lock = threading.Lock()
+        self.magazine_refills = 0  # exact: bumped under a shard lock
+
     # ------------------------------------------------------------ allocation
+    def _magazine(self) -> List[int]:
+        mag = getattr(self._tls, "mag", None)
+        if mag is None:
+            mag = self._tls.mag = []
+            with self._mag_registry_lock:
+                self._magazines.append(mag)
+        return mag
+
+    def _refill_and_pop(self, mag: List[int]) -> Optional[int]:
+        """Refill ``mag`` from a shard under one lock; return one slot."""
+        n = self._n_shards
+        home = threading.get_ident() % n
+        take = self._mag_size + 1
+        for i in range(n):
+            j = (home + i) % n
+            shard = self._shards[j]
+            with self._shard_locks[j]:
+                if shard:
+                    batch = shard[-take:]
+                    del shard[-take:]
+                    self.magazine_refills += 1
+                    slot = batch.pop()
+                    if batch:
+                        mag.extend(batch)
+                    return slot
+        # every shard empty: steal from other threads' magazines so
+        # cached-but-unused slots never masquerade as exhaustion
+        # (exactly-once still holds -- pop is atomic, a slot goes to the
+        # stealing thread or the owner, never both)
+        for other in self._magazines:
+            try:
+                return other.pop()
+            except IndexError:
+                continue
+        return None
+
     def alloc_slot(self) -> int:
-        with self._lock:
-            if not self._free_slots:
-                raise OutOfMemoryError("no free physical MS")
-            return self._free_slots.pop()
+        slot = self.try_alloc_slot()
+        if slot is None:
+            raise OutOfMemoryError("no free physical MS")
+        return slot
 
     def try_alloc_slot(self) -> Optional[int]:
+        if self._mag_size > 0:
+            # common case is one attribute load + one atomic pop; the
+            # except arm covers both a first call on this thread
+            # (AttributeError) and an empty/stolen-empty magazine
+            try:
+                return self._tls.mag.pop()
+            except (AttributeError, IndexError):
+                pass
+            return self._refill_and_pop(self._magazine())
         with self._lock:
             return self._free_slots.pop() if self._free_slots else None
 
     def free_slot(self, pfn: int) -> None:
-        with self._lock:
-            self._free_slots.append(pfn)
+        lock, shard = self._homes[pfn % self._n_shards]
+        with lock:
+            shard.append(pfn)
+
+    def drain_magazines(self) -> int:
+        """Return every magazine-cached slot to its home shard.
+
+        The drain hook reclaim/teardown uses so the shard lists hold the
+        complete free set (``free_count`` is exact either way -- this
+        just moves slots out of thread caches). Safe concurrently with
+        allocation: each pop is atomic, so a slot is drained or handed
+        out, never both. Returns the number of slots drained.
+        """
+        if self._mag_size <= 0:
+            return 0
+        drained = 0
+        for mag in self._magazines:
+            while True:
+                try:
+                    pfn = mag.pop()
+                except IndexError:
+                    break
+                self.free_slot(pfn)
+                drained += 1
+        return drained
 
     @property
     def free_count(self) -> int:
-        return len(self._free_slots)
+        n = sum(len(s) for s in self._shards)
+        if self._mag_size > 0:
+            n += sum(len(m) for m in self._magazines)
+        return n
+
+    def alloc_stats(self) -> dict:
+        """Allocator observability: shard/magazine geometry and traffic."""
+        return {
+            "slot_shards": self._n_shards,
+            "magazine_size": self._mag_size,
+            "magazine_cached": (sum(len(m) for m in self._magazines)
+                                if self._mag_size > 0 else 0),
+            "magazine_refills": self.magazine_refills,
+        }
 
     # ----------------------------------------------------------------- views
     def ms_view(self, pfn: int) -> np.ndarray:

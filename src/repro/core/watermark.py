@@ -26,6 +26,24 @@ class WatermarkPolicy:
         self.min_ms = max(0, int(managed * wm.min))
         self._lock = threading.Lock()
         self._reclaiming = False
+        # Epoch-published fast-path view (ISSUE 8): background steps and
+        # slow-path allocations write these plain attributes; the fault
+        # fast path reads them instead of walking free-list lengths under
+        # the mp_mutex. Staleness is bounded by the publish cadence (one
+        # scheduler cycle / background step / slow-path alloc). The
+        # conservative direction is preserved: a published ``critical``
+        # only ever *declines* the inline allocation, and the slow path
+        # re-verifies with the live count before acting on it. Start
+        # conservative until the first publish.
+        self.published_free_ms = -1
+        self.published_critical = True
+
+    def publish(self, free_ms: int) -> int:
+        """Epoch-publish the watermark view of ``free_ms`` (plain attribute
+        stores -- atomic under the GIL, no lock). Returns ``free_ms``."""
+        self.published_free_ms = free_ms
+        self.published_critical = free_ms <= self.min_ms
+        return free_ms
 
     # ------------------------------------------------------------- decisions
     def should_start_reclaim(self, free_ms: int) -> bool:

@@ -44,7 +44,9 @@ STAGES: Tuple[Tuple[str, Optional[str]], ...] = (
     # passive swap-in: whole fault, same interval the fault_ring records
     ("fault_total", "guest_access"),
     ("fault_mutex", "fault_total"),        # mp_mutex / rwlock / cond wait
-    ("fault_desc", "fault_total"),         # descriptor lookup + slot alloc
+    ("fault_desc", "fault_total"),         # descriptor lookup + admission
+    ("fault_alloc", "fault_desc"),         # first-in slot alloc (+ critical
+                                           # sync reclaim when below min)
     ("fault_copy", "fault_total"),         # memset / CRC / bitmap publish
     ("fault_backend", "fault_total"),      # backend decode + copy-in
     ("fault_readahead", "fault_total"),    # whole-extent sibling fill
@@ -88,6 +90,7 @@ ST_GUEST_ACCESS = _IDX["guest_access"]
 ST_FAULT_TOTAL = _IDX["fault_total"]
 ST_FAULT_MUTEX = _IDX["fault_mutex"]
 ST_FAULT_DESC = _IDX["fault_desc"]
+ST_FAULT_ALLOC = _IDX["fault_alloc"]
 ST_FAULT_COPY = _IDX["fault_copy"]
 ST_FAULT_BACKEND = _IDX["fault_backend"]
 ST_FAULT_READAHEAD = _IDX["fault_readahead"]

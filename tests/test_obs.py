@@ -138,8 +138,9 @@ def test_fault_subtree_telescopes_to_fault_total():
         for mp in range(s.cfg.mps_per_ms):
             space.read(g, 16, off=mp * s.cfg.mp_bytes)
         tree = stage_tree([s.tracer])
-        subtree = ("fault_total", "fault_mutex", "fault_desc", "fault_copy",
-                   "fault_backend", "fault_readahead", "readahead_decode")
+        subtree = ("fault_total", "fault_mutex", "fault_desc", "fault_alloc",
+                   "fault_copy", "fault_backend", "fault_readahead",
+                   "readahead_decode")
         self_sum = sum(tree[n]["self_ns"] for n in subtree if n in tree)
         assert self_sum == tree["fault_total"]["total_ns"]
     finally:

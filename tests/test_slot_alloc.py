@@ -1,0 +1,209 @@
+"""Sharded slot magazines (ISSUE 8): exactly-once admission under
+multi-thread contention, exact free-slot accounting through magazine
+drains, legacy single-list parity, and chaos kill/recover of a fleet
+node mid-fault."""
+import random
+import threading
+
+import pytest
+
+from repro.core.config import (HotPathConfig, SwapConfig, small_test_config)
+from repro.core.system import TaijiSystem
+from repro.core.virt import PhysicalMemory
+from repro.fleet.harness import build_fleet
+
+
+def _phys(magazine_size=8, slot_shards=4, n_phys_ms=128):
+    cfg = small_test_config(
+        n_phys_ms=n_phys_ms, mpool_reserve_ms=2,
+        swap=SwapConfig(hot_path=HotPathConfig(
+            slot_shards=slot_shards, magazine_size=magazine_size)))
+    return PhysicalMemory(cfg), cfg
+
+
+# ------------------------------------------------------------ exactly-once
+def test_threads_race_to_exhaustion_each_slot_served_once():
+    phys, cfg = _phys()
+    capacity = cfg.n_phys_ms - cfg.mpool_reserve_ms
+    got = [[] for _ in range(6)]
+    barrier = threading.Barrier(6)
+
+    def worker(i):
+        barrier.wait()
+        while True:
+            slot = phys.try_alloc_slot()
+            if slot is None:
+                # steal pass came up empty too: the pool is truly dry
+                return
+            got[i].append(slot)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    all_slots = [s for per in got for s in per]
+    assert len(all_slots) == capacity                 # nothing lost
+    assert len(set(all_slots)) == capacity            # nothing double-served
+    assert set(all_slots) == set(range(cfg.mpool_reserve_ms, cfg.n_phys_ms))
+    assert phys.free_count == 0
+    assert phys.try_alloc_slot() is None
+    assert phys.magazine_refills > 0
+
+
+def test_seeded_alloc_free_chaos_accounting_is_exact():
+    phys, cfg = _phys(n_phys_ms=64)
+    capacity = cfg.n_phys_ms - cfg.mpool_reserve_ms
+    held = [[] for _ in range(4)]
+    barrier = threading.Barrier(4)
+
+    def worker(i):
+        rng = random.Random(1000 + i)
+        mine = held[i]
+        barrier.wait()
+        for _ in range(4000):
+            if mine and rng.random() < 0.5:
+                phys.free_slot(mine.pop(rng.randrange(len(mine))))
+            else:
+                slot = phys.try_alloc_slot()
+                if slot is not None:
+                    mine.append(slot)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    survivors = [s for per in held for s in per]
+    assert len(set(survivors)) == len(survivors)      # never double-held
+    # quiescent accounting: free (shards + magazines) + held == capacity
+    assert phys.free_count + len(survivors) == capacity
+    phys.drain_magazines()
+    assert phys.free_count + len(survivors) == capacity
+    for s in survivors:
+        phys.free_slot(s)
+    assert phys.free_count == capacity
+
+
+# ----------------------------------------------------------- magazine drain
+def test_drain_magazines_returns_cached_slots_to_shards():
+    phys, cfg = _phys(magazine_size=8)
+    capacity = cfg.n_phys_ms - cfg.mpool_reserve_ms
+    slot = phys.alloc_slot()              # refill caches magazine_size slots
+    stats = phys.alloc_stats()
+    assert stats["magazine_size"] == 8
+    assert stats["magazine_cached"] == 8
+    assert phys.free_count == capacity - 1            # cached slots counted
+    drained = phys.drain_magazines()
+    assert drained == 8
+    assert phys.alloc_stats()["magazine_cached"] == 0
+    assert phys.free_count == capacity - 1            # accounting unchanged
+    phys.free_slot(slot)
+    assert phys.free_count == capacity
+
+
+def test_drain_collects_magazines_of_dead_threads():
+    phys, cfg = _phys()
+    capacity = cfg.n_phys_ms - cfg.mpool_reserve_ms
+    out = []
+
+    def worker():
+        out.append(phys.alloc_slot())     # leaves a populated tls magazine
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    assert phys.alloc_stats()["magazine_cached"] > 0
+    drained = phys.drain_magazines()
+    assert drained > 0
+    assert phys.alloc_stats()["magazine_cached"] == 0
+    phys.free_slot(out[0])
+    assert phys.free_count == capacity
+
+
+# ------------------------------------------------------------- legacy mode
+def test_legacy_single_list_mode_preserves_pop_order():
+    phys, cfg = _phys(magazine_size=0, slot_shards=4)
+    stats = phys.alloc_stats()
+    assert stats["magazine_size"] == 0
+    assert stats["slot_shards"] == 1      # forced single-shard
+    # seed pop order: lowest managed pfn first, exactly as before
+    assert phys.try_alloc_slot() == cfg.mpool_reserve_ms
+    assert phys.try_alloc_slot() == cfg.mpool_reserve_ms + 1
+    assert phys.drain_magazines() == 0
+    assert phys.free_count == cfg.n_phys_ms - cfg.mpool_reserve_ms - 2
+
+
+def test_magazine_and_legacy_reach_same_quiescent_state():
+    results = []
+    for hp in (HotPathConfig(), HotPathConfig.legacy_scalar()):
+        s = TaijiSystem(small_test_config(swap=SwapConfig(hot_path=hp)))
+        rng = random.Random(7)
+        gfns = [s.guest_alloc_ms() for _ in range(6)]
+        blobs = {}
+        for g in gfns:
+            blobs[g] = bytes(rng.randrange(256)
+                             for _ in range(s.cfg.mp_bytes))
+            s.guest.write(g, blobs[g])
+        for g in gfns[:4]:
+            s.engine.swap_out_ms(g)
+        reads = {g: s.guest.read(g, s.cfg.mp_bytes) for g in gfns}
+        s.engine.drain_deferred()
+        results.append((reads, s.phys.free_count,
+                        s.virt.free_ms, blobs))
+        s.close()
+    (r_mag, free_mag, vms_mag, b_mag), (r_leg, free_leg, vms_leg, b_leg) = \
+        results
+    assert r_mag == b_mag and r_leg == b_leg          # bytes survive faults
+    assert free_mag == free_leg
+    assert vms_mag == vms_leg
+
+
+# ---------------------------------------------------- fleet chaos mid-fault
+def test_chaos_kill_recover_mid_fault_keeps_accounting_exact():
+    cfg = small_test_config()
+    fleet = build_fleet(n_nodes=2, domains=2, cfg=cfg)
+    n0, n1 = fleet.nodes
+    payload = {}
+    for node in (n0, n1):
+        for _ in range(5):
+            g = node.alloc_ms()
+            payload[(node.node_id, g)] = bytes(
+                [(g * 17 + node.node_id) & 0xFF]) * cfg.mp_bytes
+            node.write_mp(g, 0, payload[(node.node_id, g)])
+    for node in (n0, n1):
+        for g in list(node.allocated):
+            node.system.engine.swap_out_ms(g)
+    # fault half of each node's set back in: the magazine path runs, and
+    # n0 dies with slots still cached in its thread magazine
+    for node in (n0, n1):
+        for g in sorted(node.allocated)[:2]:
+            assert node.read_mp(g, 0) == payload[(node.node_id, g)]
+    assert n0.system.phys.alloc_stats()["magazine_cached"] > 0
+
+    victims = len(n0.allocated)
+    fleet.kill_node(0)                    # close() drains magazines + LRU
+    fleet.tick()                          # controller re-places on n1
+    assert fleet.ms_replaced == victims and fleet.ms_lost == 0
+
+    fleet.recover_node(0)
+    assert n0.alive and n0.serving
+    # a recovered node boots empty with the full pool intact
+    assert n0.system.phys.free_count == n0.managed_phys_ms
+    assert n0.system.engine.drain_deferred() == 0
+    assert n0.system.phys.free_count == n0.managed_phys_ms
+
+    # survivor accounting is exact once deferred state is drained:
+    # free slots + slots pinned under resident MSs == managed pool
+    s1 = n1.system
+    s1.engine.drain_deferred()
+    held = sum(1 for g in range(cfg.mpool_reserve_ms, cfg.n_virt_ms)
+               if int(s1.virt.table.pfn[g]) >= 0)
+    assert s1.phys.free_count + held == n1.managed_phys_ms
+    # surviving bytes still readable on their new home
+    for g in sorted(n1.allocated):
+        data = n1.read_mp(g, 0)
+        assert len(data) == cfg.mp_bytes
+    fleet.close()
