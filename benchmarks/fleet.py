@@ -24,6 +24,7 @@ report):
 """
 from __future__ import annotations
 
+from repro.core.backend import modeled_policy_ns
 from repro.core.config import ObsConfig, small_test_config
 from repro.fleet import (REJECT_OVERCOMMIT, capture_expert_churn,
                          capture_kv_serving, chaos_trace, paper_trace)
@@ -158,12 +159,27 @@ def run_chaos(smoke: bool = False, verbose: bool = True) -> dict:
         "ms_replaced": det["ms_replaced"],
         "ms_lost": det["ms_lost"],
         "verify_failures": c["verify_failures"],
+        # remote-peer tier (ISSUE 9): lease lifecycle counters from the
+        # controller snapshot -- these are inside the deterministic dict,
+        # so the replay-twice equality above already pins them
+        "remote_puts": det["remote_puts"],
+        "remote_recovered": det["remote_recovered"],
+        "remote_rereplicated": det["remote_rereplicated"],
+        "remote_dropped": det["remote_dropped"],
+        "remote_evicted": det["remote_evicted"],
+        "remote_held": det["remote_held"],
+        "remote_modeled_ns": det["remote_modeled_ns"],
     }
     if verbose:
         print(f"chaos: {out['trace_ops']} ops, kills={out['kills']} "
               f"recovers={out['recovers']} migrations={out['migrations']} "
               f"replaced={out['ms_replaced']} lost={out['ms_lost']} "
               f"deterministic={bool(out['deterministic'])}")
+        print(f"remote tier: puts={out['remote_puts']} "
+              f"recovered={out['remote_recovered']} "
+              f"rereplicated={out['remote_rereplicated']} "
+              f"dropped={out['remote_dropped']} "
+              f"evicted={out['remote_evicted']} held={out['remote_held']}")
         if eq.divergence:
             print(f"DIVERGENCE: {eq.divergence}")
     return out
@@ -195,6 +211,26 @@ def run_capture(smoke: bool = False, verbose: bool = True) -> dict:
                   f"deterministic={eq.identical} "
                   f"verify_failures={c['verify_failures']}")
     return out
+
+
+def _policy_rows(ch: dict) -> list:
+    """Fast/Slow/Smart placement rows over the chaos run's replicated
+    population (``remote_puts`` MS images). Pure data-not-measurement
+    (``modeled_policy_ns``): Fast pretends every image stayed in local
+    compressed DRAM (cheap, zero durability), Slow pushes every load
+    over the peer fabric, Smart is the deployed split -- only the
+    ``remote_recovered`` images (dead-owner rebuilds) actually paid the
+    peer-fetch RTT."""
+    total = ch["remote_puts"]
+    n_remote = ch["remote_recovered"]
+    n_local = max(0, total - n_remote)
+    return [
+        (f"fleet_remote_policy_{policy}_us",
+         modeled_policy_ns(*split, policy) / 1e3,
+         f"images={total}_remote_reads={n_remote}")
+        for policy, split in (("fast", (total, 0)),
+                              ("slow", (0, total)),
+                              ("smart", (n_local, n_remote)))]
 
 
 def rows(smoke: bool = False, trace_out: str = None) -> list:
@@ -239,6 +275,22 @@ def rows(smoke: bool = False, trace_out: str = None) -> list:
         ("fleet_chaos_ms_lost", ch["ms_lost"],
          f"replaced={ch['ms_replaced']}"),
         ("fleet_chaos_verify_failures", ch["verify_failures"], "target=0"),
+        # remote-peer swap tier (ISSUE 9): lease-brokered replication of
+        # fully-swapped MSs onto peers. `recovered` is the payoff row --
+        # dead-owner MSs rebuilt byte-identical from peer replicas
+        # instead of being counted lost
+        ("fleet_remote_puts", ch["remote_puts"],
+         f"dropped={ch['remote_dropped']}_evicted={ch['remote_evicted']}"),
+        ("fleet_remote_recovered", ch["remote_recovered"],
+         f"rereplicated={ch['remote_rereplicated']}_"
+         f"held={ch['remote_held']}"),
+        ("fleet_remote_modeled_ms", ch["remote_modeled_ns"] / 1e6,
+         "declared_tier_latency_accrual"),
+        # modeled placement-policy comparison (flatmem's Fast/Slow/Smart
+        # trio over declared tier latencies): one sweep of the chaos
+        # run's replicated population under each policy. Smart charges
+        # remote RTT only to the MSs that actually needed a peer fetch.
+        *_policy_rows(ch),
         # captured serving workloads (ISSUE 5): real elastic_kv /
         # elastic_params traffic recorded at the GuestSpace layer and
         # replayed on a 2-node fleet with content verification

@@ -54,7 +54,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..obs.tracer import (ST_KERNEL_LOAD, ST_KERNEL_STORE, ST_SWAP_COMPRESS,
+from ..obs.tracer import (ST_BACKEND_REMOTE_GET, ST_BACKEND_REMOTE_PUT,
+                          ST_KERNEL_LOAD, ST_KERNEL_STORE, ST_SWAP_COMPRESS,
                           ST_SWAP_DECOMPRESS)
 from .config import TaijiConfig
 from .errors import CorruptionError
@@ -62,6 +63,44 @@ from .metrics import Metrics
 from .ms import K_COMPRESSED, K_DISK, K_FREE, K_NONE, K_ZERO
 
 _perf_ns = time.perf_counter_ns
+
+# ------------------------------------------------- modeled tier latency
+# Per-tier service times as *data, not measurement* (the tracehm/flatmem
+# discipline: `Memory(capacity, read_lat, write_lat)` accrues a declared
+# latency per access, so placement policies are comparable on a laptop
+# before any real transport exists). Values are per-MP figures for the
+# in-production tiers the paper names (§7.2): a zero fill is a memset, a
+# compressed load is one lz4-class decompress share, disk is an NVMe
+# read, and the remote tier is one RTT on a DPU-to-DPU RDMA fabric
+# (DxPU-class fabrics measure 10-20us round trips at 4KiB). `load_batch`
+# accrues these into `modeled_load_ns`; the remote put/get paths accrue
+# `REMOTE_*_LAT_NS` into `remote_modeled_ns`.
+TIER_READ_LAT_NS = {K_ZERO: 500, K_FREE: 500, K_COMPRESSED: 2_500,
+                    K_DISK: 100_000}
+REMOTE_READ_LAT_NS = 12_000    # peer DRAM fetch: one RTT + payload
+REMOTE_WRITE_LAT_NS = 18_000   # replica placement: RTT + remote store
+
+
+def modeled_policy_ns(n_local: int, n_remote: int, policy: str) -> int:
+    """Modeled total swap-in service time under a placement policy.
+
+    flatmem's FastSwap/SlowSwap/SmartSwap trio, recast for the
+    zero-copy-free world of modeled latencies: ``fast`` keeps every
+    payload in local compressed DRAM (cheapest loads, no durability),
+    ``slow`` pushes everything to the remote peer tier (every load pays
+    the RTT), ``smart`` is the deployed split -- locals load locally and
+    only the replicated fully-swapped population pays remote latency
+    when (and only when) recovery actually needs a peer copy.
+    """
+    local = TIER_READ_LAT_NS[K_COMPRESSED]
+    total = n_local + n_remote
+    if policy == "fast":
+        return total * local
+    if policy == "slow":
+        return total * REMOTE_READ_LAT_NS
+    if policy == "smart":
+        return n_local * local + n_remote * REMOTE_READ_LAT_NS
+    raise ValueError(f"unknown placement policy {policy!r}")
 
 
 class _Extent:
@@ -162,6 +201,21 @@ class BackendStore:
         self._ext_cache: "Dict[Tuple[int, int], bytes]" = _OD()
         self.ext_cache_hits = 0
         self.ext_cache_misses = 0
+        # remote-peer tier (ISSUE 9): replica blobs this store holds ON
+        # BEHALF OF other nodes, keyed (owner_node_id, gfn). The fleet
+        # controller brokers placement (leases) and calls remote_put /
+        # remote_get / remote_drop through the owning NodeAgent; a
+        # single-node system never touches this map. Blobs are opaque
+        # (zlib over the owner's export image) with their own CRC, so a
+        # peer can hand back bytes it cannot interpret.
+        self._remote_lock = threading.Lock()
+        self._remote: Dict[Tuple[int, int], Tuple[bytes, int]] = {}
+        self.remote_puts = 0
+        self.remote_gets = 0
+        self.remote_drops = 0
+        self.remote_held_bytes = 0
+        self.remote_modeled_ns = 0     # accrued REMOTE_*_LAT_NS (data)
+        self.modeled_load_ns = 0       # accrued TIER_READ_LAT_NS (data)
         # stage-attributed tracing (repro.obs): spans for the compress
         # fan-out and the device kernel calls; None when disabled
         self._tr = metrics.tracer
@@ -379,7 +433,8 @@ class BackendStore:
         while len(cache) > self._ext_cache_cap:
             cache.popitem(last=False)
 
-    def _ext_raw(self, key: Tuple[int, int], ext: _Extent) -> bytes:
+    def _ext_raw(self, key: Tuple[int, int], ext: _Extent,
+                 count: bool = True) -> bytes:
         """Raw payload of one extent. Callers hold ``_ext_lock``.
 
         Legacy mode (``extent_cache_entries == 0``): decompress + cache
@@ -398,18 +453,24 @@ class BackendStore:
         raw = cache.get(key)
         if raw is not None:
             cache.move_to_end(key)
-            self.ext_cache_hits += 1
+            if count:
+                self.ext_cache_hits += 1
             return raw
-        self.ext_cache_misses += 1
+        if count:
+            self.ext_cache_misses += 1
         raw = zlib.decompress(ext.payload)
         self._ext_cache_insert(key, ext, raw)
         return raw
 
-    def _ext_peek(self, gfn: int, eid: int) -> bytes:
+    def _ext_peek(self, gfn: int, eid: int, count: bool = True) -> bytes:
         """Return the whole raw buffer of an extent without consuming any
-        rows (decompresses on first touch; cached raw thereafter)."""
+        rows (decompresses on first touch; cached raw thereafter).
+        ``count=False`` skips the hit/miss counters -- used by
+        :meth:`load_batch` right after :meth:`_ext_prefetch_raw` already
+        charged this extent, so each touch is counted exactly once."""
         with self._ext_lock:
-            return self._ext_raw((gfn, eid), self._extents[(gfn, eid)])
+            return self._ext_raw((gfn, eid), self._extents[(gfn, eid)],
+                                 count=count)
 
     def _ext_prefetch_raw(self, gfn: int, eids: List[int]) -> None:
         """Decompress several extents' payloads concurrently through the
@@ -421,11 +482,21 @@ class BackendStore:
         """
         pool = self._compress_pool()
         with self._ext_lock:
-            todo = [(eid, ext.payload) for eid in eids
-                    if (ext := self._extents.get((gfn, eid))) is not None
-                    and not ext.is_raw
-                    and (self._ext_cache_cap <= 0
-                         or (gfn, eid) not in self._ext_cache)]
+            todo = []
+            for eid in eids:
+                ext = self._extents.get((gfn, eid))
+                if ext is None or ext.is_raw:
+                    continue
+                if self._ext_cache_cap > 0:
+                    if (gfn, eid) in self._ext_cache:
+                        # readahead served from the decoded-extent LRU:
+                        # count the hit and refresh recency, exactly as a
+                        # scalar fault through _ext_raw would (ISSUE 9)
+                        self._ext_cache.move_to_end((gfn, eid))
+                        self.ext_cache_hits += 1
+                        continue
+                    self.ext_cache_misses += 1
+                todo.append((eid, ext.payload))
         if not todo:
             return
         if pool is not None and len(todo) > 1:
@@ -541,6 +612,67 @@ class BackendStore:
                 for mp in shard_mps:
                     self._compressed.pop((gfn, mp), None)
         self._ext_release(gfn, eid, len(mps))
+
+    # ================================================= remote-peer tier ==
+    def remote_put(self, owner: int, gfn: int, blob: bytes,
+                   crc: int) -> bool:
+        """Hold a replica blob for ``(owner, gfn)`` on behalf of a peer.
+
+        Idempotent overwrite: a re-replication after partial progress
+        replaces the held bytes and re-counts the space exactly. Returns
+        ``True`` (placement admission -- zone checks -- is the
+        controller's job, not the store's).
+        """
+        tr = self._tr
+        t0 = _perf_ns() if tr is not None else 0
+        with self._remote_lock:
+            prev = self._remote.get((owner, gfn))
+            if prev is not None:
+                self.remote_held_bytes -= len(prev[0])
+            self._remote[(owner, gfn)] = (blob, crc)
+            self.remote_puts += 1
+            self.remote_held_bytes += len(blob)
+            self.remote_modeled_ns += REMOTE_WRITE_LAT_NS
+        if tr is not None:
+            tr.push(ST_BACKEND_REMOTE_PUT, t0, _perf_ns() - t0)
+        return True
+
+    def remote_get(self, owner: int, gfn: int) -> Optional[bytes]:
+        """Fetch (without consuming) the replica held for ``(owner,
+        gfn)``. Verifies the blob against its put-time CRC -- a bit-rot
+        replica returns ``None`` rather than corrupt bytes, and the
+        caller treats it like a missing copy."""
+        tr = self._tr
+        t0 = _perf_ns() if tr is not None else 0
+        with self._remote_lock:
+            entry = self._remote.get((owner, gfn))
+            self.remote_gets += 1
+            self.remote_modeled_ns += REMOTE_READ_LAT_NS
+        if tr is not None:
+            tr.push(ST_BACKEND_REMOTE_GET, t0, _perf_ns() - t0)
+        if entry is None:
+            return None
+        blob, crc = entry
+        if zlib.crc32(blob) != crc:
+            self.metrics.crc_failures += 1
+            return None
+        return blob
+
+    def remote_drop(self, owner: int, gfn: int) -> bool:
+        """Release the replica held for ``(owner, gfn)`` (lease broken:
+        owner wrote the MS, freed it, or the lease moved elsewhere)."""
+        with self._remote_lock:
+            entry = self._remote.pop((owner, gfn), None)
+            if entry is None:
+                return False
+            self.remote_drops += 1
+            self.remote_held_bytes -= len(entry[0])
+        return True
+
+    def remote_held(self) -> int:
+        """Number of peer replicas currently held by this store."""
+        with self._remote_lock:
+            return len(self._remote)
 
     # ================================================== batched data path ==
     def store_batch(self, gfn: int, mps: np.ndarray, data: np.ndarray
@@ -772,7 +904,8 @@ class BackendStore:
                                            dtype=np.uint8)
                 else:                         # "v": stored verbatim
                     out[i] = np.frombuffer(entry[1], dtype=np.uint8)
-            if len(by_ext) > 1:
+            prefetched = len(by_ext) > 1
+            if prefetched:
                 # decompress the batch's extents in parallel (zlib drops
                 # the GIL); each payload installs idempotently under the
                 # extent lock, so racing a concurrent scalar fault is safe
@@ -783,7 +916,7 @@ class BackendStore:
                 # one decompress + one scatter for all rows of this extent
                 if tr is not None:
                     t_p = _perf_ns()
-                raw = self._ext_peek(gfn, eid)
+                raw = self._ext_peek(gfn, eid, count=not prefetched)
                 if tr is not None:
                     # near-zero when the prefetch above already cached raw
                     tr.push(ST_SWAP_DECOMPRESS, t_p, _perf_ns() - t_p)
@@ -830,6 +963,13 @@ class BackendStore:
                 for i in disk_rows:
                     self._disk_offsets.pop((gfn, int(mps[i])), None)
         self.metrics.backend_batch_loads += 1
+        # per-tier modeled service delay (data, not measurement): the
+        # declared TIER_READ_LAT_NS figures accrue per row so placement
+        # policies compare on modeled time regardless of host speed
+        self.modeled_load_ns += (
+            len(zero_rows) * TIER_READ_LAT_NS[K_ZERO]
+            + len(comp_rows) * TIER_READ_LAT_NS[K_COMPRESSED]
+            + len(disk_rows) * TIER_READ_LAT_NS[K_DISK])
 
     # ------------------------------------------------------------- accounting
     def stored_bytes(self) -> int:
@@ -840,12 +980,37 @@ class BackendStore:
         extents = sum(e.stored_len for e in list(self._extents.values()))
         return standalone + extents
 
+    def stats(self) -> Dict[str, int]:
+        """Point-in-time operational counters: decoded-extent LRU
+        hit/miss (ISSUE 9 satellite) and the remote-peer tier's held
+        replicas and modeled latency totals."""
+        with self._ext_lock:
+            ext_entries = len(self._ext_cache)
+        with self._remote_lock:
+            remote_held = len(self._remote)
+            remote_bytes = self.remote_held_bytes
+        return {
+            "ext_cache_hits": self.ext_cache_hits,
+            "ext_cache_misses": self.ext_cache_misses,
+            "ext_cache_entries": ext_entries,
+            "remote_puts": self.remote_puts,
+            "remote_gets": self.remote_gets,
+            "remote_drops": self.remote_drops,
+            "remote_held": remote_held,
+            "remote_held_bytes": remote_bytes,
+            "remote_modeled_ns": self.remote_modeled_ns,
+            "modeled_load_ns": self.modeled_load_ns,
+        }
+
     def set_free_page_probe(self, probe) -> None:
         self._free_page_probe = probe
 
     def close(self) -> None:
         with self._ext_lock:
             self._ext_cache.clear()
+        with self._remote_lock:
+            self._remote.clear()
+            self.remote_held_bytes = 0
         if self._pool is not None:
             self._pool.shutdown(wait=False)
             self._pool = None

@@ -996,3 +996,20 @@ class SwapEngine:
     def resident_cold_fraction(self) -> float:
         hot, cold = self.lru.hot_count(), self.lru.cold_count()
         return cold / (hot + cold) if (hot + cold) else 0.0
+
+    def ms_fully_swapped(self, gfn: int) -> bool:
+        """``True`` when every MP of ``gfn`` lives in the backend.
+
+        The remote-peer tier replicates exactly this population: a
+        fully-swapped MS has no physical frame to lose, so its entire
+        guest-visible content is a backend export -- the cheapest and
+        highest-value unit to place on a peer (ISSUE 9). A point-in-time
+        read under the MP mutex; the fleet's stepped mode is
+        single-threaded, so for the controller it is exact.
+        """
+        req = self.reqs.lookup(gfn)
+        if req is None:
+            return False
+        rec = req.record
+        with req.mp_cond:
+            return rec.state == MS_SWAPPED and rec.present_count == 0

@@ -333,6 +333,7 @@ class TaijiSystem:
             "metrics": self.metrics.snapshot(),
             "n_reqs": len(self.reqs),
             "backend_stored_bytes": self.backend.stored_bytes(),
+            "backend": self.backend.stats(),
             "slot_alloc": self.phys.alloc_stats(),
         }
 

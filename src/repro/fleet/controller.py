@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import zlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
@@ -48,6 +49,36 @@ REJECT_MIGRATE_VERIFY = "migrate_verify_failed"
 # across migrations (preserved) and failure re-placements (fresh MS)
 RemapListener = Callable[[NodeAgent, int, Optional[NodeAgent],
                           Optional[int], bool], None]
+
+
+# ------------------------------------------------ remote-tier MS images
+# A replica blob is the owner's full export image (guest-visible rows +
+# resident/swapped split) compressed as one zlib stream, so the peer can
+# hold -- and hand back -- bytes it cannot interpret, and a recovered MS
+# re-lands with the elasticity state it left with.
+def _encode_ms_image(rows: np.ndarray,
+                     resident: np.ndarray) -> Tuple[bytes, int]:
+    raw = (np.asarray(resident, dtype=np.uint8).tobytes()
+           + np.ascontiguousarray(rows, dtype=np.uint8).tobytes())
+    blob = zlib.compress(raw, 1)
+    # CRC covers the *stored* bytes: the peer's remote_get re-checksums
+    # the blob as held, so rot anywhere between put and get is caught
+    # without the peer having to understand (or decompress) the image
+    return blob, zlib.crc32(blob)
+
+
+def _decode_ms_image(blob: bytes, mps_per_ms: int,
+                     mp_bytes: int) -> Tuple[np.ndarray, np.ndarray]:
+    raw = zlib.decompress(blob)
+    resident = np.frombuffer(raw[:mps_per_ms], dtype=np.uint8).astype(bool)
+    rows = np.frombuffer(raw[mps_per_ms:], dtype=np.uint8).reshape(
+        mps_per_ms, mp_bytes)
+    return rows, resident
+
+
+def _remote_tier(node: NodeAgent) -> int:
+    hp = getattr(node.cfg.swap, "hot_path", None)
+    return int(getattr(hp, "remote_tier", 0) or 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +183,22 @@ class FleetController:
         self.ms_replaced = 0             # re-placed after a hard kill (fresh)
         self.ms_lost = 0                 # died with the node, no capacity
         self.remap_listener: Optional[RemapListener] = None
+        # remote-peer swap tier (ISSUE 9): controller-brokered leases.
+        # (owner_id, gfn) -> (peer_id, peer_epoch): the peer holds a
+        # replica of the owner's fully-swapped MS in its BackendStore;
+        # peer_epoch (= peer.recoveries at grant) invalidates leases that
+        # survive a peer's death + rebirth, whose replica bytes did not.
+        self.leases: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        # drain-kill leftovers whose only surviving copy is their replica:
+        # these recover preserved or count lost -- never fresh-replaced
+        self._drain_pending: set = set()
+        self.remote_puts = 0             # replicas placed (lease grants)
+        self.remote_recovered = 0        # dead-owner MSs rebuilt from peers
+        self.remote_rereplicated = 0     # replicas re-placed off a dead peer
+        self.remote_dropped = 0          # leases broken (write/free/loss)
+        self.remote_evicted = 0          # peer hit its watermark: evict back
+        for n in self.nodes:
+            n._lease_break = self._on_lease_break
         # rolling upgrade state
         self._rolling: Optional[_RollingUpgrade] = None
         self.upgrade_batches_done = 0
@@ -252,6 +299,10 @@ class FleetController:
                 self._replace_dead_ms(node)
                 if tr is not None:
                     tr.push(ST_FLEET_RECOVERY, t_r, _perf_ns() - t_r)
+        # settle leases whose *peer* died (or was reborn): re-replicate
+        # from the still-alive owner, exactly once per lease
+        if self.leases:
+            self._settle_dead_peers()
         groups = self.cfg.reclaim_stagger_groups
         active_group = self.ticks % groups
         reclaimed = 0
@@ -267,6 +318,10 @@ class FleetController:
             t_u = _perf_ns()
             tr.push(ST_FLEET_STEP, t_s, t_u - t_s)
         self._drive_rolling()
+        # remote-peer tier passes run after stepping: reclaim is what
+        # creates the fully-swapped population worth replicating
+        self._replicate_pass()
+        self._evict_pass()
         self.ticks += 1
         if tr is not None:
             tr.push(ST_FLEET_UPGRADE, t_u, _perf_ns() - t_u)
@@ -292,14 +347,24 @@ class FleetController:
                 self.migrate_ms(node, gfn)
             # whatever could not be placed dies with the node -- counted
             # lost, NOT re-placed as a fresh MS (a silent zeroed
-            # replacement would mislabel data loss as recovery). Final by
-            # nature: the data source disappears at the kill point, so
-            # there is nothing to retry when capacity returns.
+            # replacement would mislabel data loss as recovery). Final
+            # for *unleased* MSs: their only data source disappears at
+            # the kill point, so there is nothing to retry when capacity
+            # returns. A leased MS is different (ISSUE 9): its replica
+            # outlives the node, so it stays pending on the dead
+            # identity and every tick retries lease-driven recovery --
+            # the exact scenario the remote tier exists for.
+            pending: List[int] = []
             for gfn in sorted(node.allocated):
+                if (node.node_id, gfn) in self.leases:
+                    pending.append(gfn)
+                    self._drain_pending.add((node.node_id, gfn))
+                    continue
                 self.ms_lost += 1
                 if self.remap_listener is not None:
                     self.remap_listener(node, gfn, None, None, False)
             node.allocated.clear()
+            node.allocated.update(pending)
         node.kill()
         self.kills += 1
 
@@ -331,20 +396,194 @@ class FleetController:
         """
         remaining: List[int] = []
         for gfn in sorted(node.allocated):
+            # remote-peer tier first (ISSUE 9): a valid lease means a live
+            # peer holds this MS's full content -- recover it *preserved*
+            # instead of re-placing a fresh zeroed MS. Placement bypasses
+            # the overcommit admission counter exactly like live
+            # migration does (the MS is already committed; this is the
+            # same data changing hosts, not a new allocation).
+            key = (node.node_id, gfn)
+            outcome = self._recover_from_lease(node, gfn)
+            if outcome == "recovered":
+                self._drain_pending.discard(key)
+                continue
+            if outcome == "retry" and not final:
+                remaining.append(gfn)    # lease valid, no capacity yet
+                continue
+            if key in self._drain_pending:
+                # drain leftover: its bytes only survived on the replica.
+                # With the lease unusable (or the settlement final), it
+                # is honestly lost -- a fresh zeroed replacement would
+                # mislabel data loss as recovery.
+                self._drain_pending.discard(key)
+                if self._drop_lease(node.node_id, gfn):
+                    self.remote_dropped += 1
+                self.ms_lost += 1
+                if self.remap_listener is not None:
+                    self.remap_listener(node, gfn, None, None, False)
+                continue
             dst, new_gfn, _reason = self.admit_alloc()
             if dst is None:
                 if final:
+                    if self._drop_lease(node.node_id, gfn):
+                        self.remote_dropped += 1
                     self.ms_lost += 1
                     if self.remap_listener is not None:
                         self.remap_listener(node, gfn, None, None, False)
                 else:
                     remaining.append(gfn)
                 continue
+            if self._drop_lease(node.node_id, gfn):
+                self.remote_dropped += 1
             self.ms_replaced += 1
             if self.remap_listener is not None:
                 self.remap_listener(node, gfn, dst, new_gfn, False)
         node.allocated.clear()
         node.allocated.update(remaining)
+
+    # ------------------------------------------------- remote-peer tier
+    # Zero -> compressed -> remote-peer (ISSUE 9): each serving node with
+    # ``hot_path.remote_tier > 0`` gets its fully-swapped MSs replicated
+    # onto the least-pressured peer under a controller-brokered lease.
+    # The lease registry is the single source of truth; nodes carry only
+    # a mirror set (``leased_gfns``) so their write path can break a
+    # lease in O(1). Every lease settles exactly once: recovery, owner
+    # write/free, peer death (re-replicate or drop), or peer watermark
+    # eviction.
+    def _replicate_pass(self) -> None:
+        """Place replicas for every unleased fully-swapped MS of every
+        remote-tier-enabled serving owner. Runs once per tick, after the
+        step loop (reclaim is what creates the fully-swapped population)."""
+        for owner in self.nodes:
+            if not owner.serving or _remote_tier(owner) <= 0:
+                continue
+            engine = owner.system.engine
+            for gfn in sorted(owner.allocated):
+                if (owner.node_id, gfn) in self.leases:
+                    continue
+                if not engine.ms_fully_swapped(gfn):
+                    continue
+                self._replicate_one(owner, gfn)
+
+    def _replicate_one(self, owner: NodeAgent, gfn: int) -> bool:
+        """Export one fully-swapped MS and lease its replica to a peer.
+
+        Peer choice is the shared pressure-aware placement policy
+        (:meth:`_pick_target`); a peer already in its critical watermark
+        zone is refused -- replicating onto a node in fault-path reclaim
+        would trade durability for latency where it hurts most.
+        """
+        peer = self._pick_target(exclude=owner)
+        if peer is None:
+            return False
+        if peer.system.watermark.zone(peer.free_ms) == "critical":
+            return False
+        rows, resident = owner.export_ms(gfn)
+        blob, crc = _encode_ms_image(rows, resident)
+        peer.system.backend.remote_put(owner.node_id, gfn, blob, crc)
+        self.leases[(owner.node_id, gfn)] = (peer.node_id, peer.recoveries)
+        owner.leased_gfns.add(gfn)
+        self.remote_puts += 1
+        return True
+
+    def _drop_lease(self, owner_id: int, gfn: int) -> bool:
+        """Remove one lease and its replica (if the peer still has it).
+        Returns whether a lease existed; the caller attributes the drop
+        to the right counter."""
+        lease = self.leases.pop((owner_id, gfn), None)
+        self.node_by_id(owner_id).leased_gfns.discard(gfn)
+        if lease is None:
+            return False
+        peer = self.node_by_id(lease[0])
+        if peer.alive and peer.recoveries == lease[1]:
+            peer.system.backend.remote_drop(owner_id, gfn)
+        return True
+
+    def _on_lease_break(self, owner: NodeAgent, gfn: int) -> None:
+        """Node write-path callback: the owner is about to mutate (or
+        free) a leased MS, so the replica is stale the moment the op
+        lands. Installed on every NodeAgent at controller construction."""
+        if self._drop_lease(owner.node_id, gfn):
+            self.remote_dropped += 1
+
+    def _recover_from_lease(self, owner: NodeAgent, gfn: int) -> str:
+        """Try to rebuild a dead owner's MS from its peer replica.
+
+        Returns ``"recovered"`` (content-preserving import done),
+        ``"retry"`` (lease valid but no placement capacity this tick --
+        the replica outlives the owner, so waiting is safe), or
+        ``"none"`` (no usable lease: fall through to the legacy
+        fresh-replacement path).
+        """
+        key = (owner.node_id, gfn)
+        lease = self.leases.get(key)
+        if lease is None:
+            return "none"
+        peer = self.node_by_id(lease[0])
+        if not peer.alive or peer.recoveries != lease[1]:
+            del self.leases[key]         # replica died with the peer
+            self.remote_dropped += 1
+            return "none"
+        blob = peer.system.backend.remote_get(owner.node_id, gfn)
+        if blob is None:                 # missing or failed its CRC
+            del self.leases[key]
+            self.remote_dropped += 1
+            return "none"
+        dst = self._pick_target()        # dead owner is not serving
+        if dst is None:
+            return "retry"
+        rows, resident = _decode_ms_image(blob, owner.cfg.mps_per_ms,
+                                          owner.cfg.mp_bytes)
+        new_gfn = dst.import_ms(rows, resident)
+        self._drop_lease(owner.node_id, gfn)
+        self.remote_recovered += 1
+        if self.remap_listener is not None:
+            self.remap_listener(owner, gfn, dst, new_gfn, True)
+        return "recovered"
+
+    def _settle_dead_peers(self) -> None:
+        """Settle every lease whose peer died or was reborn (stale
+        epoch): re-replicate from the still-alive owner when the MS is
+        still eligible, else drop. Exactly once per lease -- the lease
+        leaves the registry before any counter moves."""
+        for key in sorted(self.leases):
+            peer_id, epoch = self.leases[key]
+            peer = self.node_by_id(peer_id)
+            if peer.alive and peer.recoveries == epoch:
+                continue
+            owner_id, gfn = key
+            del self.leases[key]
+            owner = self.node_by_id(owner_id)
+            owner.leased_gfns.discard(gfn)
+            if (owner.serving and gfn in owner.allocated
+                    and owner.system.engine.ms_fully_swapped(gfn)
+                    and self._replicate_one(owner, gfn)):
+                self.remote_rereplicated += 1
+            else:
+                self.remote_dropped += 1
+
+    def _evict_pass(self) -> None:
+        """Release replicas held by peers that hit their critical
+        watermark: the peer's own guests outrank replica hosting, and
+        the owner still has the authoritative copy. The next replicate
+        pass re-places the MS on a healthier peer if one exists. A dead
+        owner's replica is exempt -- it is the *only* surviving copy, so
+        the peer keeps carrying it until recovery settles the lease."""
+        if not self.leases:
+            return
+        for key in sorted(self.leases):
+            peer_id, epoch = self.leases[key]
+            peer = self.node_by_id(peer_id)
+            if not peer.alive or peer.recoveries != epoch:
+                continue                 # _settle_dead_peers owns these
+            if not self.node_by_id(key[0]).alive:
+                continue                 # sole copy of a dead owner's MS
+            if peer.system.watermark.zone(peer.free_ms) != "critical":
+                continue
+            peer.system.backend.remote_drop(key[0], key[1])
+            del self.leases[key]
+            self.node_by_id(key[0]).leased_gfns.discard(key[1])
+            self.remote_evicted += 1
 
     # ------------------------------------------------------- live migration
     def migrate_ms(self, src: Union[NodeAgent, int], gfn: int,
@@ -546,6 +785,16 @@ class FleetController:
                 "migrations_rejected": dict(self.migrations_rejected),
                 "ms_replaced": self.ms_replaced,
                 "ms_lost": self.ms_lost,
+                "remote_leases": len(self.leases),
+                "remote_puts": self.remote_puts,
+                "remote_recovered": self.remote_recovered,
+                "remote_rereplicated": self.remote_rereplicated,
+                "remote_dropped": self.remote_dropped,
+                "remote_evicted": self.remote_evicted,
+                "remote_held": sum(n.system.backend.remote_held()
+                                   for n in self.nodes if n.alive),
+                "remote_modeled_ns": sum(n.system.backend.remote_modeled_ns
+                                         for n in self.nodes if n.alive),
                 "upgrade_in_progress": self.upgrade_in_progress,
                 "upgrade_batches_done": self.upgrade_batches_done,
                 "upgrade_aborted": self.upgrade_aborted,

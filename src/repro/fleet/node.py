@@ -60,6 +60,13 @@ class NodeAgent:
         self._boot()
 
         self.allocated: Set[int] = set()
+        # remote-peer tier (ISSUE 9): gfns of THIS node that currently
+        # have a replica leased out on a peer. Mirrors the controller's
+        # lease registry so the guest write path can break a lease in
+        # O(1) without asking the controller about every access;
+        # `_lease_break` is installed by the FleetController.
+        self.leased_gfns: Set[int] = set()
+        self._lease_break = None
         self.alive = True                # False after chaos kill()
         self.recoveries = 0              # completed kill->recover cycles
         self.rounds = 0                  # stepped background rounds executed
@@ -128,6 +135,7 @@ class NodeAgent:
             raise InvalidStateError(f"node {self.node_id} is not dead")
         self._boot()
         self.allocated = set()
+        self.leased_gfns = set()
         self.upgrade_failed = False
         self.alive = True
         self.recoveries += 1
@@ -164,8 +172,22 @@ class NodeAgent:
 
     def free_ms_gfn(self, gfn: int) -> None:
         self._check_serving()
+        self._maybe_break_lease(gfn)     # the replicated content dies here
         self.space.free_ms(gfn)
         self.allocated.discard(gfn)
+
+    def _maybe_break_lease(self, gfn: int) -> None:
+        """Invalidate the remote replica before a content-changing op.
+
+        Write-path cost when nothing is leased: one truthiness check on
+        an empty set. Conservative ordering -- the lease breaks *before*
+        the mutation, so a failed write can at worst drop a still-valid
+        replica (data stays authoritative on this node), never leave a
+        stale replica behind.
+        """
+        if self.leased_gfns and gfn in self.leased_gfns \
+                and self._lease_break is not None:
+            self._lease_break(self, gfn)
 
     def write_mp(self, gfn: int, mp: int, data: bytes) -> None:
         self.write_at(gfn, mp * self.cfg.mp_bytes, data)
@@ -181,6 +203,7 @@ class NodeAgent:
         if tr is not None:
             t0 = _perf_ns()
         self._check_serving()
+        self._maybe_break_lease(gfn)
         self.space.write(gfn, data, off=off)
         if tr is not None:
             tr.push(ST_NODE_CALL, t0, _perf_ns() - t0, TAG_WRITE)
@@ -205,6 +228,9 @@ class NodeAgent:
         if tr is not None:
             t0 = _perf_ns()
         self._check_serving()
+        if self.leased_gfns:
+            for gfn, _off, _data in items:
+                self._maybe_break_lease(gfn)
         self.space.write_many(items)
         if tr is not None:
             tr.push(ST_NODE_CALL, t0, _perf_ns() - t0, TAG_WRITE_MANY)
@@ -250,6 +276,7 @@ class NodeAgent:
         free path so the compression accounting returns to baseline.
         """
         self._check_alive()
+        self._maybe_break_lease(gfn)
         self.system.guest_free_ms(gfn)
         self.allocated.discard(gfn)
 

@@ -57,11 +57,13 @@ STAGES: Tuple[Tuple[str, Optional[str]], ...] = (
     ("backend_store", "swap_out"),         # store_batch wall time
     ("swap_compress", "backend_store"),    # compress fan-out (issuer wall)
     ("kernel_store", "backend_store"),     # pallas zero-scan / extent tags
+    ("backend_remote_put", "backend_store"),   # remote-peer tier replica put
     # SwapEngine batched swap-in pipeline
     ("swap_in", None),
     ("backend_load", "swap_in"),           # load_batch wall time
     ("swap_decompress", "backend_load"),   # extent/blob decompress
     ("kernel_load", "backend_load"),       # pallas scatter dispatch
+    ("backend_remote_get", "backend_load"),    # remote-peer tier replica get
     ("swap_scatter", "swap_in"),           # decoded rows -> guest MPs
     # hv_sched task execution (tag = priority class)
     ("sched_task", None),
@@ -100,11 +102,13 @@ ST_SWAP_GATHER = _IDX["swap_gather"]
 ST_BACKEND_STORE = _IDX["backend_store"]
 ST_SWAP_COMPRESS = _IDX["swap_compress"]
 ST_KERNEL_STORE = _IDX["kernel_store"]
+ST_BACKEND_REMOTE_PUT = _IDX["backend_remote_put"]
 ST_SWAP_IN = _IDX["swap_in"]
 ST_BACKEND_LOAD = _IDX["backend_load"]
 ST_SWAP_DECOMPRESS = _IDX["swap_decompress"]
 ST_KERNEL_LOAD = _IDX["kernel_load"]
 ST_SWAP_SCATTER = _IDX["swap_scatter"]
+ST_BACKEND_REMOTE_GET = _IDX["backend_remote_get"]
 ST_SCHED_TASK = _IDX["sched_task"]
 ST_FLEET_TICK = _IDX["fleet_tick"]
 ST_FLEET_RECOVERY = _IDX["fleet_recovery"]

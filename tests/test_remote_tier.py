@@ -1,0 +1,274 @@
+"""Remote-peer swap tier (ISSUE 9): lease-brokered replication of fully
+swapped-out MSs onto peer nodes, preserved recovery after owner death,
+exactly-once settlement after peer death, and the ``remote_tier=0``
+legacy-equivalence guarantee."""
+import dataclasses
+
+from repro.core.config import HotPathConfig, small_test_config
+from repro.fleet import chaos_trace
+from repro.fleet.harness import build_fleet, replay_twice
+
+
+def _cfg(remote_tier: int = 1, **hp_overrides):
+    cfg = small_test_config()
+    hp = dataclasses.replace(cfg.swap.hot_path, remote_tier=remote_tier,
+                             **hp_overrides)
+    return dataclasses.replace(
+        cfg, swap=dataclasses.replace(cfg.swap, hot_path=hp))
+
+
+def _swap_out(node, gfn):
+    node.system.engine.swap_out_ms(gfn)
+    assert node.system.engine.ms_fully_swapped(gfn)
+
+
+def _leased_setup(n_nodes=2):
+    """A fleet where node 0 owns one written, fully swapped, leased MS."""
+    fleet = build_fleet(n_nodes=n_nodes, domains=2, cfg=_cfg())
+    n0 = fleet.nodes[0]
+    gfn = n0.alloc_ms()
+    payload = bytes(range(256)) * (n0.cfg.mp_bytes // 256)
+    n0.write_mp(gfn, 0, payload)
+    n0.write_mp(gfn, 1, payload[::-1])
+    _swap_out(n0, gfn)
+    fleet.tick()                          # replicate pass grants the lease
+    assert (0, gfn) in fleet.leases
+    return fleet, n0, gfn, payload
+
+
+# ------------------------------------------------------------ replication
+def test_replicate_pass_leases_fully_swapped_ms():
+    fleet, n0, gfn, _ = _leased_setup()
+    peer_id, epoch = fleet.leases[(0, gfn)]
+    peer = fleet.node_by_id(peer_id)
+    assert peer is not n0 and epoch == peer.recoveries
+    assert gfn in n0.leased_gfns
+    assert peer.system.backend.remote_held() == 1
+    assert fleet.remote_puts == 1
+    # the replica blob round-trips its own integrity check
+    assert peer.system.backend.remote_get(0, gfn) is not None
+    # idempotent: the next tick does not re-place an already-leased MS
+    fleet.tick()
+    assert fleet.remote_puts == 1
+    fleet.close()
+
+
+def test_partially_resident_ms_is_not_replicated():
+    fleet = build_fleet(n_nodes=2, domains=2, cfg=_cfg())
+    n0 = fleet.nodes[0]
+    gfn = n0.alloc_ms()
+    n0.write_mp(gfn, 0, b"\x5A" * n0.cfg.mp_bytes)   # resident MP
+    fleet.tick()
+    assert fleet.remote_puts == 0 and not fleet.leases
+    fleet.close()
+
+
+def test_remote_tier_zero_never_replicates():
+    fleet = build_fleet(n_nodes=2, domains=2, cfg=_cfg(remote_tier=0))
+    n0 = fleet.nodes[0]
+    gfn = n0.alloc_ms()
+    n0.write_mp(gfn, 0, b"\x77" * n0.cfg.mp_bytes)
+    _swap_out(n0, gfn)
+    for _ in range(3):
+        fleet.tick()
+    assert fleet.remote_puts == 0 and not fleet.leases
+    assert all(n.system.backend.remote_held() == 0 for n in fleet.nodes)
+    fleet.close()
+
+
+# ------------------------------------------------------ preserved recovery
+def test_owner_hard_kill_recovers_byte_identical_payload():
+    fleet, n0, gfn, payload = _leased_setup()
+    remaps = []
+    fleet.remap_listener = (
+        lambda src, g, dst, ng, preserved: remaps.append(
+            (src.node_id, g, None if dst is None else dst.node_id,
+             ng, preserved)))
+    fleet.kill_node(0)                    # hard crash, no drain
+    fleet.tick()                          # recovery from the peer replica
+
+    assert fleet.remote_recovered == 1 and fleet.ms_lost == 0
+    assert fleet.ms_replaced == 0         # preserved, not zero-filled
+    assert remaps and remaps[0][4] is True
+    dst = fleet.node_by_id(remaps[0][2])
+    new_gfn = remaps[0][3]
+    assert dst.read_mp(new_gfn, 0) == payload
+    assert dst.read_mp(new_gfn, 1) == payload[::-1]
+    # the lease settled exactly once: registry and replica both gone
+    assert not fleet.leases
+    assert dst.system.backend.remote_held() == 0
+    fleet.close()
+
+
+def test_drained_kill_keeps_leased_ms_pending_until_capacity():
+    """A drain that cannot place a leased MS must not count it lost: the
+    replica outlives the node, so it stays pending and recovers
+    *preserved* once a survivor has headroom."""
+    fleet, n0, gfn, payload = _leased_setup()
+    n1 = fleet.nodes[1]
+    fillers = [n1.alloc_ms() for _ in
+               range(n1.capacity_ms - len(n1.allocated))]
+    remaps = []
+    fleet.remap_listener = (
+        lambda src, g, dst, ng, preserved: remaps.append((ng, preserved)))
+    fleet.kill_node(0, drain=True)        # no headroom: migration refused
+    assert fleet.ms_lost == 0 and gfn in n0.allocated   # pending, leased
+    fleet.tick()
+    assert fleet.ms_lost == 0 and fleet.remote_recovered == 0
+
+    for f in fillers[:2]:
+        n1.free_ms_gfn(f)
+    fleet.tick()
+    assert fleet.remote_recovered == 1 and fleet.ms_lost == 0
+    assert remaps and remaps[-1][1] is True
+    assert n1.read_mp(remaps[-1][0], 0) == payload
+    fleet.close()
+
+
+def test_recover_settles_leased_pending_as_lost_without_capacity():
+    """Identity reuse with the fleet still full is an honest loss -- the
+    replica exists but there is nowhere to put it back."""
+    fleet, n0, gfn, _ = _leased_setup()
+    n1 = fleet.nodes[1]
+    while len(n1.allocated) < n1.capacity_ms:
+        n1.alloc_ms()
+    fleet.kill_node(0, drain=True)
+    assert fleet.ms_lost == 0
+    fleet.recover_node(0)
+    assert fleet.ms_lost == 1 and fleet.remote_recovered == 0
+    assert not fleet.leases               # dropped with the settlement
+    fleet.close()
+
+
+# ----------------------------------------------------- lease invalidation
+def test_owner_write_breaks_lease_and_drops_replica():
+    fleet, n0, gfn, _ = _leased_setup()
+    peer = fleet.node_by_id(fleet.leases[(0, gfn)][0])
+    n0.write_mp(gfn, 0, b"\x11" * n0.cfg.mp_bytes)
+    assert (0, gfn) not in fleet.leases
+    assert gfn not in n0.leased_gfns
+    assert peer.system.backend.remote_held() == 0
+    assert fleet.remote_dropped == 1
+    fleet.close()
+
+
+def test_owner_free_breaks_lease():
+    fleet, n0, gfn, _ = _leased_setup()
+    n0.free_ms_gfn(gfn)
+    assert not fleet.leases and fleet.remote_dropped == 1
+    fleet.close()
+
+
+def test_peer_watermark_eviction_releases_replica():
+    fleet, n0, gfn, _ = _leased_setup(n_nodes=3)
+    peer = fleet.node_by_id(fleet.leases[(0, gfn)][0])
+    peer.system.watermark.zone = lambda free: "critical"
+    fleet.tick()                          # evict pass releases the replica
+    assert fleet.remote_evicted == 1 and not fleet.leases
+    assert peer.system.backend.remote_held() == 0
+    fleet.close()
+
+
+# -------------------------------------------------- peer-death settlement
+def test_peer_death_settles_every_lease_exactly_once():
+    """Kill the node *holding* replicas: every lease it backed must
+    settle exactly once -- re-replicated onto a live peer (still backed
+    by a real blob) or dropped, with the two outcomes summing to the
+    pre-kill count."""
+    fleet = build_fleet(n_nodes=3, domains=3, cfg=_cfg())
+    n0 = fleet.nodes[0]
+    gfns = []
+    for _ in range(4):
+        g = n0.alloc_ms()
+        n0.write_mp(g, 0, bytes([g % 251]) * n0.cfg.mp_bytes)
+        _swap_out(n0, g)
+        gfns.append(g)
+    fleet.tick()
+    assert len(fleet.leases) == 4
+    by_peer = {}
+    for key, (peer_id, _e) in fleet.leases.items():
+        by_peer.setdefault(peer_id, []).append(key)
+    victim_id, victim_keys = max(by_peer.items(), key=lambda kv: len(kv[1]))
+    pre = len(victim_keys)
+    dropped_before = fleet.remote_dropped
+
+    fleet.kill_node(victim_id)
+    fleet.tick()                          # settle + re-replicate pass
+
+    settled = fleet.remote_rereplicated + (fleet.remote_dropped
+                                           - dropped_before)
+    assert settled == pre                 # exactly once, nothing twice
+    # every surviving lease points at a live peer and a real blob
+    for (owner_id, g), (peer_id, epoch) in fleet.leases.items():
+        peer = fleet.node_by_id(peer_id)
+        assert peer.alive and peer.recoveries == epoch
+        assert peer.system.backend.remote_get(owner_id, g) is not None
+    fleet.close()
+
+
+def test_reborn_peer_epoch_invalidates_stale_lease():
+    """kill+recover of the peer between controller ticks: the lease's
+    epoch no longer matches, so settlement must treat the replica as
+    gone (the reborn node came back empty) instead of trusting it."""
+    fleet, n0, gfn, _ = _leased_setup(n_nodes=3)
+    peer_id, _epoch = fleet.leases[(0, gfn)]
+    fleet.kill_node(peer_id)
+    fleet.recover_node(peer_id)           # fresh epoch, empty backend
+    fleet.tick()
+    # settled exactly once: re-replicated onto the remaining peer (or the
+    # reborn one), never recovered from the dead epoch
+    assert fleet.remote_rereplicated == 1
+    (new_peer_id, epoch), = [v for k, v in fleet.leases.items()
+                             if k == (0, gfn)]
+    peer = fleet.node_by_id(new_peer_id)
+    assert peer.recoveries == epoch
+    assert peer.system.backend.remote_get(0, gfn) is not None
+    fleet.close()
+
+
+# --------------------------------------------------- legacy equivalence
+def _chaos_lines(n_nodes, cfg):
+    managed = n_nodes * (cfg.n_phys_ms - cfg.mpool_reserve_ms)
+    return chaos_trace(13, cfg.ms_bytes, cfg.mps_per_ms, n_nodes,
+                       fill_ms=int(managed * 1.1), burst=200,
+                       kills=2, migrations=3).lines()
+
+
+def test_remote_tier_off_is_legacy_bit_for_bit():
+    """``remote_tier=0`` (including the forced-legacy scalar plugin)
+    must replay byte-identically and never touch a remote counter."""
+    base = small_test_config()
+    legacy = dataclasses.replace(
+        base, swap=dataclasses.replace(
+            base.swap, hot_path=HotPathConfig.legacy_scalar()))
+    for cfg in (_cfg(remote_tier=0), legacy):
+        eq = replay_twice(_chaos_lines(4, cfg), n_nodes=4, domains=2,
+                          cfg=cfg)
+        assert eq.identical, eq.divergence
+        det = eq.runs[0].deterministic
+        assert det["remote_puts"] == 0
+        assert det["remote_recovered"] == 0
+        assert det["remote_rereplicated"] == 0
+        assert det["remote_dropped"] == 0
+        assert det["remote_evicted"] == 0
+        assert det["remote_leases"] == 0
+        assert det["remote_held"] == 0
+        assert det["remote_modeled_ns"] == 0
+
+
+def test_remote_tier_strictly_reduces_chaos_loss():
+    """The bugfix payoff, pinned as an inequality on the same trace:
+    with the remote tier on, node death loses strictly fewer MSs, and
+    at least one dead-owner MS is recovered from a peer replica."""
+    cfg_on, cfg_off = _cfg(remote_tier=1), _cfg(remote_tier=0)
+    eq_on = replay_twice(_chaos_lines(4, cfg_on), n_nodes=4, domains=2,
+                         cfg=cfg_on)
+    eq_off = replay_twice(_chaos_lines(4, cfg_off), n_nodes=4, domains=2,
+                          cfg=cfg_off)
+    assert eq_on.identical and eq_off.identical
+    det_on = eq_on.runs[0].deterministic
+    det_off = eq_off.runs[0].deterministic
+    assert det_on["remote_recovered"] >= 1
+    assert det_on["ms_lost"] < det_off["ms_lost"]
+    # determinism bit survives the remote tier wholesale
+    assert eq_on.runs[0].counters["verify_failures"] == 0
