@@ -33,7 +33,7 @@ def run(n_ms: int = 96, hot_fraction: float = 0.45, scans: int = 12,
         for w in range(cfg.lru.workers):
             system.lru.scan_shard(w, cfg.lru.workers)
 
-    from repro.core.lru import COLD, COLD_INT, INACTIVE
+    from repro.core.lru import INACTIVE
     identified_cold = {g for g in gfns
                        if (system.lru.level_of(g) or 0) >= INACTIVE}
     actual_cold = set(gfns) - hot

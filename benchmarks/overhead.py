@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.reduce import reduced_config
 from repro.core.config import ObsConfig, small_test_config

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from ..obs.tracer import (ST_BACKEND_REMOTE_GET, ST_BACKEND_REMOTE_PUT,
                           ST_KERNEL_LOAD, ST_KERNEL_STORE, ST_SWAP_COMPRESS,
                           ST_SWAP_DECOMPRESS)
@@ -146,16 +147,17 @@ class BackendStore:
         # explicitly tagged tuples: ("z", blob) zlib, ("v", raw) verbatim,
         # ("x", eid, row) extent reference into self._extents.
         self._locks: List[threading.Lock] = [
-            threading.Lock() for _ in range(max(1, cfg.backend.lock_shards))]
+            named_lock("backend.shard")
+            for _ in range(max(1, cfg.backend.lock_shards))]
         self._compressed: Dict[Tuple[int, int], tuple] = {}
         # batch extents: (gfn, eid) -> _Extent; the payload is the zlib
         # stream until the first partial load caches it raw, stored_len
         # stays the compressed size so accounting is unaffected
-        self._ext_lock = threading.Lock()
+        self._ext_lock = named_lock("backend.ext")
         self._extents: Dict[Tuple[int, int], _Extent] = {}
         self._ext_seq = 0
         # per-kind lock: the disk tier appends through its own mutex
-        self._disk_lock = threading.Lock()
+        self._disk_lock = named_lock("backend.disk")
         self._disk_offsets: Dict[Tuple[int, int], Tuple[int, int]] = {}
         self._disk_file = None
         self._disk_tail = 0
@@ -183,7 +185,7 @@ class BackendStore:
         # identical for any worker count. Lazily created: most systems in
         # tests never swap enough to need it.
         self._pool = None
-        self._pool_lock = threading.Lock()
+        self._pool_lock = named_lock("backend.pool")
         self._pool_workers = int(hp.compress_workers) if hp is not None else 0
         # decoded-extent LRU (ISSUE 8): bounded cache of decompressed
         # extent payloads keyed (gfn, eid), guarded by _ext_lock. With it
@@ -208,7 +210,7 @@ class BackendStore:
         # single-node system never touches this map. Blobs are opaque
         # (zlib over the owner's export image) with their own CRC, so a
         # peer can hand back bytes it cannot interpret.
-        self._remote_lock = threading.Lock()
+        self._remote_lock = named_lock("backend.remote")
         self._remote: Dict[Tuple[int, int], Tuple[bytes, int]] = {}
         self.remote_puts = 0
         self.remote_gets = 0

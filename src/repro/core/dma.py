@@ -12,10 +12,10 @@ the step duration. The registry supports both long-lived application tags
 """
 from __future__ import annotations
 
-import threading
 from contextlib import contextmanager
 from typing import Dict, Iterable, List, Set
 
+from ..analysis.lock_order import named_lock
 from .metrics import Metrics
 from .swap import SwapEngine
 from .virt import NO_PFN, VirtualizationLayer
@@ -27,7 +27,7 @@ class DMARegistry:
         self.virt = virt
         self.engine = engine
         self.metrics = metrics
-        self._lock = threading.Lock()
+        self._lock = named_lock("app")
         # gfn -> pin refcount (a gfn may be in several active ranges/steps)
         self._pins: Dict[int, int] = {}
         self._ranges: Dict[str, List[int]] = {}

@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from .config import TaijiConfig
 from .guest import GuestSpace
 from .system import TaijiSystem
@@ -121,7 +122,7 @@ class ElasticKVCache:
         self.geom = geom
         self.space = space.guest if isinstance(space, TaijiSystem) else space
         self.system = self.space.system      # telemetry / legacy accessors
-        self._lock = threading.Lock()
+        self._lock = named_lock("app")
         # seq_id -> list of gfns (one per block) and token count
         self._blocks: Dict[int, List[int]] = {}
         self._tokens: Dict[int, int] = {}

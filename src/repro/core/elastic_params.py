@@ -18,11 +18,11 @@ Inapplicable to dense architectures -- noted in DESIGN.md
 """
 from __future__ import annotations
 
-import threading
-from typing import Dict, Iterable, List, Sequence, Union
+from typing import Dict, Iterable, Sequence, Union
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from .config import TaijiConfig
 from .guest import GuestSpace, MSView
 from .system import TaijiSystem
@@ -69,7 +69,7 @@ class ElasticExpertCache:
         if nbytes > self.space.cfg.ms_bytes:
             raise ValueError(
                 f"expert ({nbytes}B) exceeds MS ({self.space.cfg.ms_bytes}B)")
-        self._lock = threading.Lock()
+        self._lock = named_lock("app")
         self._view: Dict[int, MSView] = {}    # eid -> typed view of its MS
         self.route_counts = np.zeros(n_experts, dtype=np.int64)
 

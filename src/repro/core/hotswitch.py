@@ -22,12 +22,12 @@ switch, and swappability afterwards.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from .config import TaijiConfig
 from .system import TaijiSystem
 from .virt import PhysicalMemory
@@ -55,12 +55,12 @@ class PlainMemorySystem:
         cfg.validate()
         self.cfg = cfg
         self.phys = PhysicalMemory(cfg)
-        self._alloc_lock = threading.Lock()
+        self._alloc_lock = named_lock("app")
         self.allocated: List[int] = []
         # pre-switch accessor: identity translation straight to physical
         self.accessor: "MemoryAccessor" = DirectAccessor(self)
         # per-PCPU quiesce locks (the SMP-call stop point)
-        self.pcpu_locks = [threading.Lock() for _ in range(cfg.scheduler.shards)]
+        self.pcpu_locks = [named_lock("pcpu") for _ in range(cfg.scheduler.shards)]
 
     def alloc_ms(self) -> int:
         with self._alloc_lock:

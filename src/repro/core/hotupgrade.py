@@ -22,6 +22,7 @@ import threading
 import time
 from typing import Callable, Dict, Optional
 
+from ..analysis.lock_order import named_lock
 from .config import ABI_VERSION
 from .errors import ABIMismatchError
 from .ms import MSRecord, record_nbytes
@@ -35,7 +36,7 @@ class EntryOps:
     def __init__(self) -> None:
         self._ops: Dict[str, Callable] = {}
         self._inflight = 0
-        self._lock = threading.Lock()
+        self._lock = named_lock("entry")
         self._drained = threading.Condition(self._lock)
 
     def register(self, name: str, fn: Callable) -> None:

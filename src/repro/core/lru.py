@@ -18,10 +18,10 @@ Six sets from hot end to cold end:
 """
 from __future__ import annotations
 
-import threading
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional
 
+from ..analysis.lock_order import named_lock
 from .config import TaijiConfig
 
 HOT, HOT_INT, ACTIVE, INACTIVE, COLD_INT, COLD = range(6)
@@ -35,7 +35,7 @@ class MultiLevelLRU:
         """``accessed_probe(gfn)`` test-and-clears the access bit (EPT A-bit)."""
         self.cfg = cfg
         self.accessed_probe = accessed_probe
-        self._lock = threading.Lock()
+        self._lock = named_lock("lru")
         # level -> OrderedDict[gfn -> unchanged_scan_count]
         self._sets: List[OrderedDict] = [OrderedDict() for _ in range(N_LEVELS)]
         self._level_of: Dict[int, int] = {}

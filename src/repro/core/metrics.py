@@ -11,11 +11,12 @@ the GIL (single bytecode ops on ints are atomic in CPython).
 """
 from __future__ import annotations
 
-import threading
 import time
 from typing import Dict, List
 
 import numpy as np
+
+from ..analysis.lock_order import named_lock
 
 # fault-kind codes recorded alongside each latency sample (3 tag bits in
 # the ring encoding: 2 kind bits + the fast-path flag)
@@ -160,7 +161,7 @@ class LatencyRing:
         self._buf = np.zeros(cap, dtype=np.int64)
         self._pos = 0
         self._cap = cap
-        self._lock = threading.Lock()
+        self._lock = named_lock("metrics")
         self.hist = hist
         self.by_kind = by_kind
         self.metrics = metrics       # deferred fast-path counter target
@@ -227,7 +228,7 @@ class Timeline:
     """Append-only (t, value) series, e.g. free-memory water level."""
 
     def __init__(self, maxlen: int = 100_000) -> None:
-        self._lock = threading.Lock()
+        self._lock = named_lock("metrics")
         self._t0 = time.perf_counter()
         self.points: List[tuple] = []
         self._maxlen = maxlen

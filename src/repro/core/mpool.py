@@ -22,11 +22,11 @@ Faithfulness notes:
 """
 from __future__ import annotations
 
-import threading
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from .errors import MpoolExhaustedError
 
 _MIN_CLASS = 32  # smallest slab object, bytes
@@ -75,7 +75,7 @@ class Mpool:
         self.page_bytes = page_bytes
         self.n_pages = len(buffer) // page_bytes
 
-        self._lock = threading.Lock()
+        self._lock = named_lock("mpool")
         self._free_pages: List[int] = list(range(self.n_pages - 1, -1, -1))
         # size-class -> list of slab pages with free slots
         self._partial: Dict[int, List[_SlabPage]] = {}

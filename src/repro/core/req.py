@@ -22,6 +22,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..analysis.lock_order import STATE as _LOCKDEP, named_lock
 from .config import TaijiConfig
 from .errors import InvalidStateError
 from .mpool import Mpool
@@ -46,16 +47,29 @@ class RWLockWriterCancel:
     until it exits (the writer polls :attr:`WriteGrant.cancelled` at safe
     points and aborts promptly). Writers are mutually exclusive and wait
     for all readers to drain.
+
+    Lockdep: the grant itself is a *virtual* lock entity of class
+    ``req.rwlock`` (rank below the mp_mutex -- a grant is taken before
+    the mutex, never under it except by trylock). The hooks fire outside
+    the internal condition lock so the witness never sees a false
+    cond -> rwlock edge; with the witness off each hook costs one
+    truthiness check. ``group`` links the grant to the owning req's
+    mp_mutex for the gate exemption (PR 3 bailout).
     """
 
-    def __init__(self) -> None:
-        self._cond = threading.Condition()
+    def __init__(self, group: object = None) -> None:
+        self._cond = threading.Condition(named_lock("req.rwlock.cond", group))
         self._readers = 0
         self._writer: Optional[WriteGrant] = None
+        self._group = group
         self.cancel_count = 0  # stats: how often readers bumped a writer
 
     # --------------------------------------------------------------- readers
     def acquire_read(self) -> None:
+        if _LOCKDEP.on:
+            from ..analysis import witness
+            witness.push_virtual(witness.RWLOCK_CLASS, self._group,
+                                 id(self), write=False)
         with self._cond:
             if self._writer is not None and not self._writer.cancelled:
                 self._writer.cancelled = True
@@ -69,16 +83,28 @@ class RWLockWriterCancel:
             self._readers -= 1
             if self._readers == 0:
                 self._cond.notify_all()
+        if _LOCKDEP.on:
+            from ..analysis import witness
+            witness.pop_virtual(id(self))
 
     # --------------------------------------------------------------- writers
     def acquire_write(self, blocking: bool = True) -> Optional[WriteGrant]:
+        if _LOCKDEP.on and blocking:
+            from ..analysis import witness
+            witness.push_virtual(witness.RWLOCK_CLASS, self._group,
+                                 id(self), write=True)
         with self._cond:
             if not blocking and (self._writer is not None or self._readers > 0):
                 return None
             while self._writer is not None or self._readers > 0:
                 self._cond.wait()
             self._writer = WriteGrant()
-            return self._writer
+            grant = self._writer
+        if _LOCKDEP.on and not blocking:
+            from ..analysis import witness
+            witness.push_virtual(witness.RWLOCK_CLASS, self._group,
+                                 id(self), write=True, trylock=True)
+        return grant
 
     def release_write(self, grant: WriteGrant) -> None:
         with self._cond:
@@ -86,6 +112,9 @@ class RWLockWriterCancel:
                 raise InvalidStateError("releasing a write grant not held")
             self._writer = None
             self._cond.notify_all()
+        if _LOCKDEP.on:
+            from ..analysis import witness
+            witness.pop_virtual(id(self))
 
 
 class Req:
@@ -96,11 +125,13 @@ class Req:
     def __init__(self, gfn: int, record: MSRecord) -> None:
         self.gfn = gfn
         self.record = record
-        self.rwlock = RWLockWriterCancel()
+        self.rwlock = RWLockWriterCancel(group=gfn)
         # short mutex guarding bitmap/state transitions (word-level CAS in
         # the kernel; a tiny critical section here), plus a condition used
-        # by faults waiting on an in-flight IO for the same MP (Fig 8 (3.3))
-        self.mp_mutex = threading.Lock()
+        # by faults waiting on an in-flight IO for the same MP (Fig 8 (3.3)).
+        # The GFN group ties the mutex to the rwlock grant above: nesting
+        # mp_mutex under mp_mutex is legal only with the write grant held
+        self.mp_mutex = named_lock("req.mp_mutex", group=gfn)
         self.mp_cond = threading.Condition(self.mp_mutex)
         # plain-int arena offsets (header/bm_out/bm_in/kinds/crc), filled
         # by FaultDescTable.register -- the fault fast path unpacks this
@@ -196,7 +227,7 @@ class ReqTree:
         self.cfg = cfg
         self.mpool = mpool
         self._tree = RBTree()
-        self._lock = threading.Lock()
+        self._lock = named_lock("req.tree")
         # fast-path cache: dict lookups are O(1); the RB tree remains the
         # authoritative ordered structure (and is what property tests check)
         self._cache: Dict[int, Req] = {}
@@ -231,7 +262,11 @@ class ReqTree:
         after it holds the req's write lock). Deliberately does NOT take
         the tree lock: the mutex bounce must not nest under it (reclaim
         paths acquire the tree lock while holding a req mutex), and the
-        row read + validity store are GIL-atomic."""
+        row read + validity store are GIL-atomic. This constraint is
+        machine-checked: it is the declared anti-edge
+        ``("req.tree", "req.mp_mutex")`` in
+        :mod:`repro.analysis.lock_order`, and the runtime witness raises
+        on any nest that violates it (tests/test_lockdep.py)."""
         self.table.quiesce(gfn)
 
     def remove(self, gfn: int) -> None:

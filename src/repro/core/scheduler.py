@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
+from ..analysis.lock_order import named_lock
 from ..obs.tracer import ST_SCHED_TASK
 from .config import TaijiConfig
 
@@ -54,7 +55,7 @@ class RunQueue:
 
     def __init__(self) -> None:
         self.classes: List[List[Task]] = [[], [], [], []]
-        self.lock = threading.Lock()
+        self.lock = named_lock("sched.rq")
         # accounting: per-class runtime for fairness checks (Fig 14b)
         self.class_runtime_s = [0.0, 0.0, 0.0, 0.0]
 

@@ -38,8 +38,8 @@ from ..obs.tracer import (ST_BACKEND_LOAD, ST_BACKEND_STORE, ST_FAULT_ALLOC,
                           ST_SWAP_OUT, ST_SWAP_SCATTER)
 from .metrics import (FK_COMPRESSED, FK_FAST, FK_OTHER, FK_READAHEAD,
                       FK_ZERO, Metrics)
-from .ms import (H_PFN, H_PRESENT, H_STATE, K_COMPRESSED, K_DISK, K_FREE,
-                 K_NONE, K_ZERO, MS_PARTIAL, MS_RESIDENT, MS_SWAPPED)
+from .ms import (H_PFN, H_PRESENT, H_STATE, K_COMPRESSED, K_FREE,
+                 K_NONE, K_ZERO, MS_RESIDENT, MS_SWAPPED)
 from .req import Req, ReqTree
 from .virt import F_PINNED, NO_PFN, VirtualizationLayer
 from .watermark import WatermarkPolicy

@@ -9,12 +9,12 @@ and what the framework integrations (elastic_kv / elastic_params) drive.
 from __future__ import annotations
 
 import sys
-import threading
 import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from . import scheduler as sched
 from .backend import BackendStore
 from .config import TaijiConfig
@@ -76,7 +76,7 @@ class TaijiSystem:
         self.scheduler.add_cycle_hook(self.engine.publish_epoch)
         self.dma = DMARegistry(self.virt, self.engine, self.metrics)
 
-        self._gfn_lock = threading.Lock()
+        self._gfn_lock = named_lock("gfn")
         self._free_gfns: List[int] = list(
             range(cfg.n_virt_ms - 1, cfg.mpool_reserve_ms - 1, -1))
         self._background_started = False

@@ -29,6 +29,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from .config import TaijiConfig
 from .errors import InvalidStateError, OutOfMemoryError, PinnedError
 from .mpool import Handle, Mpool
@@ -98,7 +99,7 @@ class PhysicalMemory:
         if self._mag_size <= 0:
             n_shards = 1  # legacy single-list path
         self._n_shards = max(1, min(n_shards, max(1, len(slots))))
-        self._shard_locks = [threading.Lock() for _ in range(self._n_shards)]
+        self._shard_locks = [named_lock("slot") for _ in range(self._n_shards)]
         if self._n_shards == 1:
             self._shards: List[List[int]] = [slots]
         else:
@@ -114,7 +115,7 @@ class PhysicalMemory:
         # magazine regardless of owning thread
         self._tls = threading.local()
         self._magazines: List[List[int]] = []
-        self._mag_registry_lock = threading.Lock()
+        self._mag_registry_lock = named_lock("slot")
         self.magazine_refills = 0  # exact: bumped under a shard lock
         if self._mag_size > 0:
             # rebind the allocation entry point per-instance: the hot
@@ -304,7 +305,7 @@ class BlockTable:
                       if len(flag_views) > 1 else flag_views[0][:n])
         self.pfn[:] = NO_PFN
         self.flags[:] = 0
-        self._lock = threading.Lock()
+        self._lock = named_lock("blocktable")
 
     # NOTE: single-word reads/writes of int32 numpy cells are effectively
     # atomic under the GIL; multi-field transitions take the lock.

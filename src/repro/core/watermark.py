@@ -11,8 +11,7 @@ from the fault path (min watermark).
 """
 from __future__ import annotations
 
-import threading
-
+from ..analysis.lock_order import named_lock
 from .config import TaijiConfig
 
 
@@ -24,7 +23,7 @@ class WatermarkPolicy:
         self.high_ms = max(1, int(managed * wm.high))
         self.low_ms = max(1, int(managed * wm.low))
         self.min_ms = max(0, int(managed * wm.min))
-        self._lock = threading.Lock()
+        self._lock = named_lock("watermark")
         self._reclaiming = False
         # Epoch-published fast-path view (ISSUE 8): background steps and
         # slow-path allocations write these plain attributes; the fault

@@ -13,7 +13,7 @@ band-limited noise; vision embeddings are unit-normal patches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -57,12 +57,12 @@ import base64
 import binascii
 import json
 import random
-import threading
 import zlib
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
 from ..core.guest import GuestObserver
 
 TRACE_MAGIC = "taiji-trace v1"
@@ -428,7 +428,7 @@ class TraceRecorder(GuestObserver):
         # header keeps them only so seed-derived touch writes (if any
         # are spliced in) stay well-defined
         self.header = TraceHeader(seed, ms_bytes, mps_per_ms, 0.0, 0.0)
-        self._lock = threading.Lock()
+        self._lock = named_lock("metrics")
         self._token: Dict[int, int] = {}     # live gfn -> trace token
         self._cov: Dict[int, _Coverage] = {}  # token -> known-content ranges
         self._next_token = 0

@@ -20,7 +20,6 @@ import inspect
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import AbstractMesh, Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ArchConfig

@@ -25,7 +25,7 @@ from jax import lax
 from repro import shard_ctx
 
 from .config import ArchConfig
-from .layers import (apply_rope, attention_block, chunked_attention,
+from .layers import (apply_rope, attention_block,
                      decode_attention, mrope_cos_sin, rms_norm, rope_angles,
                      swiglu)
 from .moe import moe_ffn

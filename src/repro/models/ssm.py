@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro import shard_ctx
 
 from .config import ArchConfig
 

@@ -11,7 +11,7 @@ lazily without an import cycle.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 
 def _esc(v: str) -> str:

@@ -30,6 +30,8 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.lock_order import named_lock
+
 # --------------------------------------------------------------- stages
 # (name, parent-name-or-None). The tree is static: self_time(stage) =
 # total(stage) - sum(total(child) for declared children), clamped at 0.
@@ -155,7 +157,7 @@ class SpanTracer:
         self._tid = np.zeros(cap, dtype=np.int64)
         self._pos = 0
         self._cap = cap
-        self._lock = threading.Lock()
+        self._lock = named_lock("metrics")
         self._count = np.zeros((N_STAGES, N_TAGS), dtype=np.int64)
         self._total = np.zeros((N_STAGES, N_TAGS), dtype=np.int64)
         self._max = np.zeros((N_STAGES, N_TAGS), dtype=np.int64)

@@ -1,8 +1,38 @@
 import os
 import sys
 
+import pytest
+
 # kernels + models run on the single host CPU device in tests; the 512-
 # device override belongs ONLY to the dry-run (see launch/dryrun.py)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _lockdep_env_on() -> bool:
+    return os.environ.get("TAIJI_LOCKDEP", "") not in ("", "0")
+
+
+@pytest.fixture(autouse=True)
+def _lockdep_latch():
+    """In the lockdep CI lane, fail any test whose run latched a lock-order
+    violation even if the raising thread swallowed it (scheduler workers
+    log task exceptions instead of propagating). Tests that provoke
+    violations on purpose drain the latch via ``witness.clear_violations``
+    before returning."""
+    if not _lockdep_env_on():
+        yield
+        return
+    from repro.analysis import witness
+    before = len(witness.violations)
+    yield
+    fresh = witness.violations[before:]
+    assert not fresh, f"lock-order violations latched during test: {fresh}"
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("TAIJI_LOCKDEP_GRAPH")
+    if path and _lockdep_env_on():
+        from repro.analysis import witness
+        witness.dump_graph_to(path)

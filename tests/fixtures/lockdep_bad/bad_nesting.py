@@ -1,0 +1,45 @@
+"""Known-bad concurrency patterns for the AST lint's fixture suite.
+
+NOT a test module (and not importable into the engine): every construct
+below is a violation the lint must flag with a file:line finding. Kept
+under tests/fixtures/ so neither pytest nor `lint src/` picks it up.
+"""
+import threading
+import time
+import zlib
+
+
+class BadReclaim:
+    """Each method is one seeded violation class."""
+
+    def __init__(self):
+        self.spare = threading.Lock()          # TJL003: bare construction
+
+    def tree_then_mutex(self, reqs, req):
+        # the exact drift req.py:232 documents: the mutex bounce nested
+        # under the tree lock (declared anti-edge req.tree -> req.mp_mutex)
+        with reqs._lock:                       # lock: req.tree
+            req.mp_mutex.acquire()             # TJL001: anti-edge
+            req.mp_mutex.release()
+
+    def rank_inversion(self, backend, req):
+        with backend._ext_lock:
+            with req.mp_mutex:                 # TJL001: 52 -> 20 inversion
+                pass
+
+    def blocking_under_mutex(self, req, other):
+        with req.mp_cond:
+            time.sleep(0.001)                  # TJL002: sleep under mutex
+            zlib.compress(b"x" * 64)           # TJL002: compress under mutex
+            other.mp_cond.wait()               # TJL002: foreign condvar wait
+
+    def blocking_writer_under_mutex(self, req, victim):
+        with req.mp_mutex:
+            # PR 3's bailout uses blocking=False here; the blocking form
+            # is a rank inversion (rwlock ranks below the mutex)
+            victim.rwlock.acquire_write()      # TJL001: 20 -> 10 blocking
+
+    def deprecated_shims(self, system, gfn):
+        addr = system.ms_addr(gfn, mp=1)       # TJL004
+        system.write(addr, b"zz")              # TJL004
+        return system.read(addr, 2)            # TJL004

@@ -16,8 +16,8 @@ import pytest
 from repro.core.config import SwapConfig, small_test_config
 from repro.core.errors import CorruptionError
 from repro.core.metrics import (FK_COMPRESSED, FK_FAST, FK_ZERO,
-                                LatencyHistogram, LatencyRing, Metrics)
-from repro.core.ms import (K_COMPRESSED, K_NONE, K_ZERO, MS_PARTIAL,
+                                LatencyHistogram, Metrics)
+from repro.core.ms import (K_COMPRESSED, K_NONE, K_ZERO,
                            MS_RESIDENT, MS_SWAPPED)
 from repro.core.system import TaijiSystem
 

@@ -8,8 +8,7 @@ from repro.core.config import ABI_VERSION, small_test_config
 from repro.core.hotupgrade import EngineModule, EngineModuleV2
 from repro.fleet import (REJECT_NO_CAPACITY, REJECT_OVERCOMMIT, FleetConfig,
                          NodeNotServingError, TraceGen, TraceHeader,
-                         TraceReplayer, page_bytes, paper_trace, parse_line,
-                         touch_addr)
+                         TraceReplayer, page_bytes, paper_trace, parse_line)
 from repro.fleet.harness import build_fleet, replay_twice
 
 

@@ -9,7 +9,7 @@ from repro.core.config import small_test_config
 from repro.core.hotupgrade import EngineModuleV2
 from repro.fleet import (NodeDeadError, TraceGen, chaos_trace)
 from repro.fleet.harness import (assert_deterministic, build_fleet,
-                                 first_divergence, replay_twice,
+                                 first_divergence,
                                  snapshot_diff)
 
 

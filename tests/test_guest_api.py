@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.config import small_test_config
 from repro.core.elastic_kv import ElasticKVCache, KVGeometry, make_kv_taiji_config
-from repro.core.guest import GuestObserver, GuestSpace
+from repro.core.guest import GuestObserver
 from repro.core.system import TaijiSystem
 from repro.core.virt import NO_PFN
 from repro.fleet.controller import FleetConfig

@@ -1,0 +1,269 @@
+"""Lock hierarchy enforcement (ISSUE 10): the runtime witness's rank /
+anti-edge / cycle detection, the PR 3 bailout false-positive guard, the
+off-mode zero-overhead contract, and the AST lint fixture suite."""
+import contextlib
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.analysis import lint, lock_order, witness
+from repro.analysis.lock_order import LockOrderViolation, named_lock
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "lockdep_bad")
+SRC = os.path.join(REPO, "src")
+
+
+@contextlib.contextmanager
+def lockdep_on():
+    """Enable the witness for locks constructed inside the block; drain
+    any latched violations on exit (so the autouse lane check and later
+    tests see a clean slate) and restore the previous switch state."""
+    prev = lock_order.STATE.on
+    lock_order.STATE.on = True
+    try:
+        yield
+    finally:
+        witness.clear_violations()
+        lock_order.STATE.on = prev
+
+
+# ---------------------------------------------------------------- witness
+def test_rank_inversion_raises():
+    with lockdep_on():
+        lru = named_lock("lru")
+        mutex = named_lock("req.mp_mutex", group=1)
+        with pytest.raises(LockOrderViolation, match="rank inversion"):
+            with lru:
+                mutex.acquire()
+        assert not lru.locked()  # the with-block unwound
+
+
+def test_ascending_ranks_are_legal():
+    with lockdep_on():
+        mutex = named_lock("req.mp_mutex", group=2)
+        slot = named_lock("slot")
+        metrics = named_lock("metrics")
+        with mutex:
+            with slot:
+                with metrics:
+                    assert witness.held_classes() == [
+                        "req.mp_mutex", "slot", "metrics"]
+        assert witness.held_classes() == []
+
+
+def test_anti_edge_tree_then_mutex_raises():
+    """Regression for the req.py:232 contract (satellite 3): the mutex
+    bounce must not nest under the tree lock. The declared anti-edge
+    fires even though plain rank order would already reject it -- with
+    the documented message, so the report names the invariant."""
+    with lockdep_on():
+        tree = named_lock("req.tree")
+        mutex = named_lock("req.mp_mutex", group=3)
+        with pytest.raises(LockOrderViolation, match="anti-edge"):
+            with tree:
+                mutex.acquire()  # the quiesce bounce, nested wrongly
+        drained = witness.clear_violations()
+        assert any("quiesce" in v for v in drained)
+
+
+def test_mutex_then_tree_is_legal():
+    """The real direction: critical-zone reclaim takes the tree lock
+    while holding a req mutex (get_or_create under _alloc_slot_critical).
+    The declared order (tree above mp_mutex) must allow it."""
+    with lockdep_on():
+        mutex = named_lock("req.mp_mutex", group=4)
+        tree = named_lock("req.tree")
+        with mutex:
+            with tree:
+                pass
+        assert witness.clear_violations() == []
+
+
+def test_trylock_is_exempt_but_still_held():
+    with lockdep_on():
+        lru = named_lock("lru")
+        mutex = named_lock("req.mp_mutex", group=5)
+        metrics = named_lock("metrics")
+        with lru:
+            assert mutex.acquire(blocking=False)  # inversion, but trylock
+            # ...and the trylocked mutex still participates as a held
+            # lock: a leaf above it is fine
+            with metrics:
+                assert witness.held_classes() == [
+                    "lru", "req.mp_mutex", "metrics"]
+            mutex.release()
+        assert witness.clear_violations() == []
+
+
+def test_gate_allows_pr3_bailout_nesting():
+    """The critical-zone bailout (PR 3): while holding req A's mutex, the
+    reclaimer trylocks victim B's write grant and only then takes B's
+    mutex. Same-rank mutex nesting is legal iff that grant is held."""
+    with lockdep_on():
+        mutex_a = named_lock("req.mp_mutex", group=10)
+        mutex_b = named_lock("req.mp_mutex", group=11)
+        with mutex_a:
+            # trylocked write grant on req B (what acquire_write(
+            # blocking=False) records on success)
+            witness.push_virtual(witness.RWLOCK_CLASS, 11, iid=0xB,
+                                 write=True, trylock=True)
+            try:
+                with mutex_b:  # gated: B's write grant is held
+                    assert witness.held_classes()[-1] == "req.mp_mutex"
+            finally:
+                witness.pop_virtual(0xB)
+        assert witness.clear_violations() == []
+
+
+def test_mutex_nesting_without_grant_raises():
+    with lockdep_on():
+        mutex_a = named_lock("req.mp_mutex", group=12)
+        mutex_b = named_lock("req.mp_mutex", group=13)
+        with pytest.raises(LockOrderViolation, match="same-rank"):
+            with mutex_a:
+                mutex_b.acquire()  # no write grant for req 13: ABBA risk
+
+
+def test_cross_thread_cycle_detected():
+    """T1 takes A then B (legal: 'app' is a multi class). T2 then taking
+    B before A must raise at the acquisition that closes the cycle, even
+    though T2's own stack never inverts a rank."""
+    with lockdep_on():
+        a = named_lock("app")
+        b = named_lock("app")
+
+        def t1():
+            with a:
+                with b:
+                    pass
+
+        t = threading.Thread(target=t1)
+        t.start()
+        t.join()
+
+        with pytest.raises(LockOrderViolation, match="cycle"):
+            with b:
+                a.acquire()
+
+
+def test_condition_wait_keeps_stack_accurate():
+    """Condition.wait releases/reacquires through the witness wrapper,
+    so locks taken after a wait still see an accurate held stack."""
+    with lockdep_on():
+        mutex = named_lock("req.mp_mutex", group=6)
+        cond = threading.Condition(mutex)
+        metrics = named_lock("metrics")
+        with cond:
+            cond.wait(timeout=0.01)
+            with metrics:
+                assert witness.held_classes() == ["req.mp_mutex", "metrics"]
+        assert witness.held_classes() == []
+        assert witness.clear_violations() == []
+
+
+def test_edge_graph_records_observed_edges():
+    with lockdep_on():
+        witness.reset()
+        mutex = named_lock("req.mp_mutex", group=7)
+        slot = named_lock("slot")
+        with mutex:
+            with slot:
+                pass
+        graph = witness.dump_graph()
+        assert {"src": "req.mp_mutex", "dst": "slot", "tag": "ok",
+                "count": 1} in graph["edges"]
+        assert graph["violations"] == []
+
+
+# ------------------------------------------------- engine false positives
+def test_engine_under_pressure_is_clean():
+    """False-positive guard at engine level: a system pushed into the
+    critical zone (reclaim-under-fault, the gated bailout nesting) must
+    produce zero witness violations."""
+    from repro.core.config import small_test_config
+    from repro.core.system import TaijiSystem
+
+    with lockdep_on():
+        witness.reset()
+        sys_ = TaijiSystem(small_test_config())
+        space = sys_.guest
+        cfg = sys_.cfg
+        n = cfg.n_virt_ms - cfg.mpool_reserve_ms - 2  # well past physical
+        gfns = [space.alloc_ms() for _ in range(n)]
+        pat = b"\xa5" * 256
+        for g in gfns:
+            space.write(g, pat)
+            sys_.step_background()
+        for g in gfns:  # fault the cold tail back in
+            assert space.read(g, len(pat)) == pat
+        assert witness.clear_violations() == []
+        graph = witness.dump_graph()
+        # the run actually exercised nesting under the mutex
+        assert any(e["src"] == "req.mp_mutex" for e in graph["edges"])
+
+
+# ------------------------------------------------------------- off mode
+def test_off_mode_returns_raw_lock():
+    """With the witness off, named_lock must hand back a plain
+    threading.Lock -- not a wrapper -- so the fault fast path pays
+    literally nothing."""
+    prev = lock_order.STATE.on
+    lock_order.STATE.on = False
+    try:
+        lk = named_lock("req.mp_mutex", group=1)
+        assert type(lk) is type(threading.Lock())
+    finally:
+        lock_order.STATE.on = prev
+
+
+def test_rwlock_hooks_are_one_truthiness_check_when_off():
+    from repro.core.req import RWLockWriterCancel
+    prev = lock_order.STATE.on
+    lock_order.STATE.on = False
+    try:
+        rw = RWLockWriterCancel(group=1)
+        rw.acquire_read()
+        rw.release_read()
+        grant = rw.acquire_write()
+        rw.release_write(grant)
+        # off mode must leave no witness state behind
+        assert witness.held_classes() == []
+    finally:
+        lock_order.STATE.on = prev
+
+
+# ------------------------------------------------------------ AST lint
+def test_lint_clean_on_src():
+    assert lint.lint_paths([SRC]) == []
+
+
+def test_lint_fixture_findings():
+    findings = lint.lint_paths([FIXTURE])
+    codes = {f.code for f in findings}
+    assert codes == {"TJL001", "TJL002", "TJL003", "TJL004"}
+    by_code = {}
+    for f in findings:
+        assert f.path.endswith("bad_nesting.py") and f.line > 0
+        by_code.setdefault(f.code, []).append(f)
+    assert len(by_code["TJL001"]) == 3   # anti-edge, inversion, rwlock
+    assert len(by_code["TJL002"]) == 3   # sleep, compress, foreign wait
+    assert len(by_code["TJL003"]) == 1   # bare Lock()
+    assert len(by_code["TJL004"]) == 3   # ms_addr, write, read
+    anti = [f for f in by_code["TJL001"] if "anti-edge" in f.message]
+    assert anti and "quiesce" in anti[0].message
+
+
+@pytest.mark.parametrize("target,expected", [("src/", 0),
+                                             ("tests/fixtures/lockdep_bad/", 1)])
+def test_lint_cli_exit_codes(target, expected):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", target],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    assert proc.returncode == expected, proc.stdout + proc.stderr
+    if expected:
+        assert "TJL001" in proc.stdout and ":" in proc.stdout.split()[0]

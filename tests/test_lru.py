@@ -9,7 +9,7 @@ except ImportError:          # pragma: no cover - CI pins hypothesis
     HAVE_HYPOTHESIS = False
 
 from repro.core.config import small_test_config
-from repro.core.lru import (ACTIVE, COLD, COLD_INT, HOT, HOT_INT, INACTIVE,
+from repro.core.lru import (ACTIVE, COLD, HOT, HOT_INT, INACTIVE,
                             MultiLevelLRU)
 
 

@@ -4,7 +4,6 @@ extent), the resident/swapped split survives the move, source accounting
 drains back to baseline, and admission rejects without mutating either
 node."""
 import numpy as np
-import pytest
 
 from repro.core.config import small_test_config
 from repro.fleet import (REJECT_MIGRATE_BAD_SRC, REJECT_MIGRATE_NO_DST,

@@ -2,7 +2,7 @@
 import time
 
 from repro.core.config import SchedulerConfig, small_test_config
-from repro.core.scheduler import BACK, FCPU, FRONT, IDLE, HvScheduler
+from repro.core.scheduler import BACK, FRONT, HvScheduler
 
 
 def spin_task(duration):

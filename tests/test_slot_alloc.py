@@ -5,8 +5,6 @@ node mid-fault."""
 import random
 import threading
 
-import pytest
-
 from repro.core.config import (HotPathConfig, SwapConfig, small_test_config)
 from repro.core.system import TaijiSystem
 from repro.core.virt import PhysicalMemory

@@ -1,6 +1,4 @@
 """Substrate: data pipeline, optimizer, checkpoint, metrics, HLO analyzer."""
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np

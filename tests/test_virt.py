@@ -1,5 +1,4 @@
 """Hybrid virtualization layer (paper §4.1): translation + contracts."""
-import numpy as np
 import pytest
 
 from repro.core.config import small_test_config
